@@ -1,0 +1,3 @@
+"""Benchmarks: one module per paper figure/table (Fig 1, 4, 5, 8-15 and the
+Appendix-A volume models).  ``python -m benchmarks.run`` executes all and
+prints a CSV; each module also exposes ``run()`` returning rows."""

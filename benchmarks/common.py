@@ -1,0 +1,44 @@
+"""Shared benchmark helpers: timed execution, workload construction, CSV
+row emission.  Bench scale is CPU-sized (2^13-2^15 rows); the paper's
+cluster-scale claims are reproduced as *ratios* (latency ratios, shuffle
+ratios, accuracy curves), which is what the figures plot."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.relation import relation
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    """(median seconds, result) with a warmup call."""
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+def pair_with_overlap(n: int, overlap: float, seed: int = 0,
+                      keys_per_dataset: int = 2048):
+    from repro.data.synthetic import overlapping_relations
+    return overlapping_relations([n, n], overlap, seed=seed,
+                                 keys_per_dataset=keys_per_dataset)
+
+
+def row(bench: str, **fields) -> dict:
+    return {"bench": bench, **fields}
+
+
+def print_rows(rows) -> None:
+    for r in rows:
+        bench = r.pop("bench")
+        body = ",".join(f"{k}={v}" for k, v in r.items())
+        print(f"{bench},{body}")

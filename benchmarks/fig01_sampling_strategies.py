@@ -1,0 +1,35 @@
+"""Fig. 1: accuracy + latency of the three sampling strategies vs fraction
+(sampling before / during / after the join)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import pair_with_overlap, row, timed
+from repro.core import (QueryBudget, approx_join, native_join,
+                        postjoin_sampling, prejoin_sampling)
+
+FRACTIONS = (0.01, 0.05, 0.1, 0.5)
+N = 1 << 13
+
+
+def run() -> list[dict]:
+    rels = pair_with_overlap(N, 0.2, seed=1, keys_per_dataset=512)
+    exact = float(native_join(rels).estimate)
+    rows = []
+    for frac in FRACTIONS:
+        t_pre, pre = timed(prejoin_sampling, rels, frac, seed=3)
+        t_dur, dur = timed(
+            lambda: approx_join(rels, QueryBudget(error=1.0,
+                                                  pilot_fraction=frac),
+                                max_strata=1024, b_max=2048, seed=3))
+        t_post, post = timed(postjoin_sampling, rels, frac, seed=3,
+                             max_strata=1024)
+        for name, res, t in (("before_join", pre, t_pre),
+                             ("during_join(approxjoin)", dur, t_dur),
+                             ("after_join", post, t_post)):
+            err = abs(float(res.estimate) - exact) / abs(exact)
+            rows.append(row("fig01", strategy=name, fraction=frac,
+                            accuracy_loss=round(err, 6),
+                            latency_s=round(t, 4)))
+    return rows

@@ -1,0 +1,42 @@
+"""Fig. 4: shuffled data size — (a) vs number of inputs at 1% overlap,
+(b) vs overlap fraction with 3 inputs (closed-form Appendix-A models at the
+paper's simulation scale, plus our measured meters at bench scale)."""
+
+from __future__ import annotations
+
+from benchmarks.common import row
+from repro.core import volume_approxjoin, volume_broadcast, volume_repartition
+from repro.core.bloom import num_blocks_for
+
+K = 100                       # paper's simulated cluster size
+TUPLE = 1024                  # bytes per record — the paper's simulation
+                              # regime (its Fig-4 repartition volumes imply
+                              # ~1 KiB records; see fig14 for the narrow-
+                              # record crossover analysis)
+
+
+def run() -> list[dict]:
+    rows = []
+    # (a) vary number of inputs, 1% overlap
+    base = 10_000_000
+    for n_inputs in (2, 3, 4, 5, 6):
+        sizes = [base * TUPLE] * n_inputs
+        live = [0.01 * base * TUPLE] * n_inputs
+        fb = num_blocks_for(base, 0.01) * 32
+        rows.append(row("fig04a", n_inputs=n_inputs,
+                        broadcast_mb=round(volume_broadcast(sizes, K) / 1e6),
+                        repartition_mb=round(
+                            volume_repartition(sizes, K) / 1e6),
+                        approxjoin_mb=round(
+                            volume_approxjoin(live, fb, K) / 1e6)))
+    # (b) vary overlap fraction, 3 inputs
+    for ov in (0.01, 0.05, 0.1, 0.2, 0.4, 0.8):
+        sizes = [base * TUPLE] * 3
+        live = [ov * base * TUPLE] * 3
+        fb = num_blocks_for(base, 0.01) * 32
+        rows.append(row("fig04b", overlap=ov,
+                        repartition_mb=round(
+                            volume_repartition(sizes, K) / 1e6),
+                        approxjoin_mb=round(
+                            volume_approxjoin(live, fb, K) / 1e6)))
+    return rows

@@ -1,0 +1,40 @@
+"""Fig. 5: offline profiling of the cross-product latency vs input size —
+the linearity that justifies d_cp = beta * CP_total (Eq. 5) — and the fitted
+beta_compute for THIS machine (used by the budget benches)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.core.cost import calibrate_beta
+
+
+def run() -> list[dict]:
+    sizes = (1 << 14, 1 << 16, 1 << 18, 1 << 20)
+    cost = calibrate_beta(sizes=sizes, repeats=3)
+    rows = [row("fig05", beta_compute=f"{cost.beta_compute:.3e}",
+                epsilon=f"{cost.epsilon:.3e}")]
+    # linearity check: residual of the linear fit
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    rng = np.random.default_rng(0)
+
+    @jax.jit
+    def work(a, b):
+        return jnp.sum(a + b) + jnp.sum((a + b) ** 2)
+
+    for n in sizes:
+        a = jnp.asarray(rng.random(n, np.float32))
+        b = jnp.asarray(rng.random(n, np.float32))
+        work(a, b).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(3):
+            work(a, b).block_until_ready()
+        t = (time.perf_counter() - t0) / 3
+        pred = cost.beta_compute * n + cost.epsilon
+        rows.append(row("fig05", n=n, measured_s=f"{t:.3e}",
+                        linear_fit_s=f"{pred:.3e}"))
+    return rows

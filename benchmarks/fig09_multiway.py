@@ -1,0 +1,39 @@
+"""Fig. 9: multi-way joins — latency and shuffled size vs overlap fraction
+(3-way) and vs number of inputs (2/3/4-way at the paper's overlap setup)."""
+
+from __future__ import annotations
+
+from benchmarks.common import row, timed
+from repro.core import QueryBudget, approx_join, volume_repartition
+from repro.core.join import TUPLE_BYTES
+from repro.data.synthetic import overlapping_relations
+
+N = 1 << 13
+
+
+def run() -> list[dict]:
+    rows = []
+    for ov in (0.01, 0.06, 0.1):
+        rels = overlapping_relations([N] * 3, ov, seed=3)
+        t, res = timed(lambda: approx_join(rels, QueryBudget(),
+                                           max_strata=2048), repeats=2)
+        d = res.diagnostics
+        rows.append(row("fig09ab", overlap=ov, latency_s=round(t, 4),
+                        shuffled_filtered_b=int(d.shuffled_bytes_filtered),
+                        shuffled_repartition_b=int(
+                            d.shuffled_bytes_repartition),
+                        reduction_x=round(
+                            float(d.shuffled_bytes_repartition)
+                            / max(float(d.shuffled_bytes_filtered), 1), 2)))
+    # paper setup: 2-way ov=1%, 3-way ov=0.33%, 4-way ov=0.25%
+    for n_inputs, ov in ((2, 0.01), (3, 0.0033), (4, 0.0025)):
+        rels = overlapping_relations([N] * n_inputs, ov, seed=4)
+        t, res = timed(lambda: approx_join(rels, QueryBudget(),
+                                           max_strata=2048), repeats=2)
+        d = res.diagnostics
+        rows.append(row("fig09c", n_inputs=n_inputs, overlap=ov,
+                        latency_s=round(t, 4),
+                        reduction_x=round(
+                            float(d.shuffled_bytes_repartition)
+                            / max(float(d.shuffled_bytes_filtered), 1), 2)))
+    return rows

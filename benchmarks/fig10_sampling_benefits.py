@@ -1,0 +1,47 @@
+"""Fig. 10: (a) scalability with worker count [shuffle-model, Appendix A],
+(b) latency vs sampling fraction vs the extended repartition join,
+(c) accuracy loss vs sampling fraction."""
+
+from __future__ import annotations
+
+from benchmarks.common import pair_with_overlap, row, timed
+from repro.core import (QueryBudget, approx_join, native_join,
+                        postjoin_sampling, volume_approxjoin,
+                        volume_repartition)
+from repro.core.bloom import num_blocks_for
+
+N = 1 << 14
+
+
+def run() -> list[dict]:
+    rows = []
+    # (a) shuffle volume vs cluster size at 1% overlap (analytic, paper model)
+    base = 10_000_000 * 8
+    for k in (2, 4, 8, 16, 32):
+        fb = num_blocks_for(10_000_000, 0.01) * 32
+        rows.append(row("fig10a", k=k,
+                        repartition_mb=round(
+                            volume_repartition([base] * 2, k) / 1e6),
+                        approxjoin_mb=round(
+                            volume_approxjoin([0.01 * base] * 2, fb, k)
+                            / 1e6)))
+    # (b)+(c): latency & accuracy vs fraction, 20% overlap workload
+    rels = pair_with_overlap(N, 0.2, seed=5, keys_per_dataset=512)
+    exact = float(native_join(rels).estimate)
+    for frac in (0.01, 0.1, 0.4, 0.8):
+        t_dur, dur = timed(
+            lambda: approx_join(rels, QueryBudget(error=1.0,
+                                                  pilot_fraction=frac),
+                                max_strata=1024, b_max=4096, seed=6),
+            repeats=2)
+        t_post, post = timed(postjoin_sampling, rels, frac, seed=6,
+                             b_max=4096, max_strata=1024, repeats=2)
+        rows.append(row(
+            "fig10bc", fraction=frac,
+            approxjoin_s=round(t_dur, 4),
+            extended_repartition_s=round(t_post, 4),
+            approxjoin_err=round(abs(float(dur.estimate) - exact)
+                                 / abs(exact), 6),
+            extended_repartition_err=round(abs(float(post.estimate) - exact)
+                                           / abs(exact), 6)))
+    return rows

@@ -1,0 +1,44 @@
+"""Fig. 11: cost-function effectiveness — give ApproxJoin a latency budget,
+measure the achieved latency (and the accuracy at the chosen sample size)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import pair_with_overlap, row
+from repro.core import QueryBudget, approx_join, native_join
+from repro.core.cost import calibrate_pipeline
+
+N = 1 << 14
+
+
+def run() -> list[dict]:
+    rels = pair_with_overlap(N, 0.2, seed=7, keys_per_dataset=512)
+    exact = float(native_join(rels).estimate)
+    # calibrate against the REAL operator (paper Fig. 5 -> Fig. 11 loop)
+    cost = calibrate_pipeline(rels, max_strata=1024, b_max=None, seed=8)
+    rows = [row("fig11", beta=f"{cost.beta_compute:.2e}",
+                eps=f"{cost.epsilon:.3f}")]
+    for budget_s in (0.05, 0.2, 0.5):
+        # steady-state timing (first call compiles the grid bucket; the
+        # paper's fidelity claim is about repeated query execution)
+        res = approx_join(rels, QueryBudget(latency_s=budget_s),
+                          cost_model=cost, max_strata=1024, b_max=None,
+                          seed=8)
+        jax.block_until_ready(res.estimate)
+        t0 = time.perf_counter()
+        res = approx_join(rels, QueryBudget(latency_s=budget_s),
+                          cost_model=cost, max_strata=1024, b_max=None,
+                          seed=8)
+        jax.block_until_ready(res.estimate)
+        took = time.perf_counter() - t0
+        err = abs(float(res.estimate) - exact) / abs(exact)
+        rows.append(row("fig11", desired_s=budget_s,
+                        achieved_s=round(took, 4),
+                        sampled=bool(res.diagnostics.sampled),
+                        draws=int(res.diagnostics.sample_draws)
+                        if res.diagnostics.sampled else 0,
+                        accuracy_loss=round(err, 6)))
+    return rows

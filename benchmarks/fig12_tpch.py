@@ -1,0 +1,55 @@
+"""Fig. 12: TPC-H — (a) Q3/Q4/Q10 join-core latencies for ApproxJoin vs the
+SnappyData-shaped comparator (post-join sampling over offline synopses),
+(b) latency and (c) accuracy vs sampling fraction on the
+CUSTOMER |><| ORDERS money query."""
+
+from __future__ import annotations
+
+from benchmarks.common import row, timed
+from repro.core import QueryBudget, approx_join, native_join, postjoin_sampling
+from repro.data import tpch
+
+SCALE = 0.005
+
+
+def run() -> list[dict]:
+    t = tpch.generate(scale=SCALE, seed=1)
+    rows = []
+    # (a) query join cores, filtering only (exact), vs post-join comparator
+    cores = {"Q3": tpch.q3_core(t), "Q4": [tpch.q4_core(t)],
+             "Q10": tpch.q10_core(t)}
+    for name, joins in cores.items():
+        t_aj = t_sd = 0.0
+        for rels in joins:
+            ta, _ = timed(lambda r=rels: approx_join(
+                r, QueryBudget(), max_strata=1 << 13), repeats=2)
+            ts, _ = timed(postjoin_sampling, rels, 1.0, max_strata=1 << 13,
+                          b_max=64, repeats=2)
+            t_aj += ta
+            t_sd += ts
+        rows.append(row("fig12a", query=name,
+                        approxjoin_s=round(t_aj, 4),
+                        snappydata_style_s=round(t_sd, 4)))
+    # (b)+(c) the money query with sampling
+    rels = tpch.q_customer_orders(t)
+    exact = float(native_join(rels).estimate)
+    for frac in (0.2, 0.6, 1.0):
+        if frac >= 1.0:
+            ta, res = timed(lambda: approx_join(rels, QueryBudget(),
+                                                max_strata=1 << 13),
+                            repeats=2)
+            err = abs(float(res.estimate) - exact) / abs(exact)
+        else:
+            ta, res = timed(lambda: approx_join(
+                rels, QueryBudget(error=100.0, pilot_fraction=frac),
+                max_strata=1 << 13, b_max=64, seed=9), repeats=2)
+            err = abs(float(res.estimate) - exact) / abs(exact)
+        ts, post = timed(postjoin_sampling, rels, frac,
+                         max_strata=1 << 13, b_max=64, repeats=2)
+        err_post = abs(float(post.estimate) - exact) / abs(exact)
+        rows.append(row("fig12bc", fraction=frac,
+                        approxjoin_s=round(ta, 4),
+                        snappydata_style_s=round(ts, 4),
+                        approxjoin_err=round(err, 6),
+                        snappydata_style_err=round(err_post, 6)))
+    return rows

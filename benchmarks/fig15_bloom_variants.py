@@ -1,0 +1,25 @@
+"""Fig. 15 (Appendix B): size of the Bloom-filter variants (regular /
+counting / invertible / scalable / our split-block) vs false-positive rate,
+at 100 K inserted items."""
+
+from __future__ import annotations
+
+from benchmarks.common import row
+from repro.core import bloom
+
+N = 100_000
+
+
+def run() -> list[dict]:
+    rows = []
+    for fp in (0.1, 0.01, 0.001):
+        rows.append(row(
+            "fig15", fp_rate=fp,
+            regular_kb=round(bloom.flat_filter_bits(N, fp) / 8e3, 1),
+            split_block_kb=round(
+                bloom.num_blocks_for(N, fp) * 32 / 1e3, 1),
+            counting_kb=round(bloom.counting_filter_bits(N, fp) / 8e3, 1),
+            invertible_kb=round(
+                bloom.invertible_filter_bits(N, fp) / 8e3, 1),
+            scalable_kb=round(bloom.scalable_filter_bits(N, fp) / 8e3, 1)))
+    return rows

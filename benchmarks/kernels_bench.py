@@ -1,0 +1,48 @@
+"""Kernel-path microbenchmarks: join-stage wall times on this host and the
+HBM-traffic model that motivates the fused edge_sample kernel (the jnp path
+materializes the [S, b_max] grids; the kernel keeps them in VMEM)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.core import bloom
+from repro.core.relation import relation, sort_by_key
+from repro.core.sampling import build_strata, sample_edges
+from repro.kernels import ops
+
+N = 1 << 15
+S, B_MAX = 1024, 512
+
+
+def run() -> list[dict]:
+    rng = np.random.default_rng(0)
+    r1 = sort_by_key(relation(rng.integers(0, S // 2, N).astype(np.uint32),
+                              rng.normal(3, 1, N).astype(np.float32)))
+    r2 = sort_by_key(relation(rng.integers(0, S // 2, N).astype(np.uint32),
+                              rng.normal(1, 2, N).astype(np.float32)))
+    nb = bloom.num_blocks_for(N, 0.01)
+    t_build, f = timed(lambda: bloom.build(r1.keys, r1.valid, nb, 0))
+    t_probe, _ = timed(lambda: bloom.contains(f, r2.keys))
+    strata = build_strata([r1, r2], S)
+    import jax.numpy as jnp
+    b_i = jnp.ceil(0.2 * strata.population)
+    t_jnp, _ = timed(lambda: sample_edges([r1, r2], strata, b_i, B_MAX, 1))
+    t_kern, _ = timed(lambda: ops.sample_stats([r1, r2], strata, b_i,
+                                               B_MAX, 1, interpret=True))
+    # HBM-traffic model (f32): jnp path materializes 2 idx + 2 val + f + f^2
+    grid_bytes = S * B_MAX * 4 * 6
+    fused_bytes = S * 4 * 3 + N * 4 * 2   # stats out + values in
+    return [
+        row("kernels", stage="bloom_build", seconds=round(t_build, 4),
+            n=N),
+        row("kernels", stage="bloom_probe", seconds=round(t_probe, 4),
+            n=N),
+        row("kernels", stage="edge_sample_jnp", seconds=round(t_jnp, 4),
+            grid_hbm_mb=round(grid_bytes / 1e6, 1)),
+        row("kernels", stage="edge_sample_fused(interpret)",
+            seconds=round(t_kern, 4),
+            fused_hbm_mb=round(fused_bytes / 1e6, 1),
+            traffic_reduction_x=round(grid_bytes / fused_bytes, 1)),
+    ]

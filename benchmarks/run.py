@@ -1,0 +1,57 @@
+"""Run every paper-figure benchmark and print one CSV.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig01 ...  # subset by prefix
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (fig01_sampling_strategies, fig04_shuffle_models,
+                        fig05_cost_function, fig08_twoway_filtering,
+                        fig09_multiway, fig10_sampling_benefits,
+                        fig11_budget_fidelity, fig12_tpch, fig13_realworld,
+                        fig14_fp_tradeoff, fig15_bloom_variants,
+                        kernels_bench)
+from benchmarks.common import print_rows
+
+MODULES = [
+    ("fig01", fig01_sampling_strategies),
+    ("fig04", fig04_shuffle_models),
+    ("fig05", fig05_cost_function),
+    ("fig08", fig08_twoway_filtering),
+    ("fig09", fig09_multiway),
+    ("fig10", fig10_sampling_benefits),
+    ("fig11", fig11_budget_fidelity),
+    ("fig12", fig12_tpch),
+    ("fig13", fig13_realworld),
+    ("fig14", fig14_fp_tradeoff),
+    ("fig15", fig15_bloom_variants),
+    ("kernels", kernels_bench),
+]
+
+
+def main() -> None:
+    want = sys.argv[1:]
+    failures = []
+    for name, mod in MODULES:
+        if want and not any(name.startswith(w) for w in want):
+            continue
+        t0 = time.time()
+        try:
+            rows = mod.run()
+            print_rows(rows)
+            print(f"# {name}: {len(rows)} rows in {time.time() - t0:.1f}s",
+                  flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, e))
+            print(f"# {name}: FAILED {type(e).__name__}: {e}", flush=True)
+    if failures:
+        raise SystemExit(f"{len(failures)} benchmark(s) failed: "
+                         f"{[n for n, _ in failures]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Paper §6.1: 'What is the total size of the flows that appeared in all
+TCP, UDP and ICMP traffic?' — a 3-way join over CAIDA-like flow tables,
+exact vs budgeted-approximate, with the shuffle-volume meters.
+
+Run:  PYTHONPATH=src python examples/network_flows.py
+"""
+
+import time
+
+import jax
+
+from repro.core import QueryBudget, approx_join
+from repro.data.flows import flow_tables
+
+tcp, udp, icmp = flow_tables(scale=8192, shared_fraction=0.03, seed=7)
+rels = [icmp, udp, tcp]   # lead with the smallest input (fewest strata)
+print(f"flows: tcp={int(tcp.count())} udp={int(udp.count())} "
+      f"icmp={int(icmp.count())}")
+
+t0 = time.perf_counter()
+exact = approx_join(rels, QueryBudget(), max_strata=8192)
+jax.block_until_ready(exact.estimate)
+t_exact = time.perf_counter() - t0
+d = exact.diagnostics
+print(f"exact:   total bytes = {float(exact.estimate):.4g}  "
+      f"({int(exact.count)} joined flow triples, {t_exact:.2f}s)")
+print(f"         shuffle reduction: "
+      f"{float(d.shuffled_bytes_repartition) / float(d.shuffled_bytes_filtered):.1f}x "
+      f"less data on the wire than a repartition join")
+
+t0 = time.perf_counter()
+approx = approx_join(rels, QueryBudget(error=0.02, pilot_fraction=0.1),
+                     max_strata=8192, b_max=256, seed=1)
+jax.block_until_ready(approx.estimate)
+t_approx = time.perf_counter() - t0
+err = abs(float(approx.estimate) - float(exact.estimate)) \
+    / float(exact.estimate)
+print(f"sampled: total bytes = {float(approx.estimate):.4g} "
+      f"+/- {float(approx.error_bound):.3g}  "
+      f"({t_approx:.2f}s, true rel err {err:.4f})")

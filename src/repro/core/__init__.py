@@ -1,0 +1,30 @@
+"""ApproxJoin core: the paper's contribution as a composable JAX module.
+
+Public surface:
+  relation     — static-shape Relation (the RDD stand-in)
+  bloom        — split-block Bloom sketch + Alg. 1 filter algebra
+  sampling     — stratified sampling during the join (Alg. 2) + exact paths
+  estimators   — CLT / Horvitz-Thompson error bounds (§3.4)
+  cost         — query-budget cost functions + sigma feedback (§3.2)
+  budget       — WITHIN/ERROR query budget interface (§2)
+  join         — single-device approx_join orchestrator
+  distributed  — shard_map SPMD pipeline over the mesh
+  baselines    — Spark native/repartition/broadcast + pre/post-join sampling
+"""
+
+from repro.core.baselines import (BaselineResult, broadcast_join, native_join,
+                                  postjoin_sampling, prejoin_sampling,
+                                  repartition_join, volume_approxjoin,
+                                  volume_broadcast, volume_repartition)
+from repro.core.budget import QueryBudget, parse_budget
+from repro.core.cost import CostModel, SigmaRegistry, calibrate_beta
+from repro.core.distributed import (DistJoinResult, distributed_approx_join,
+                                    make_distributed_join)
+from repro.core.estimators import (Estimate, StratumStats, accuracy_loss,
+                                   clt_avg, clt_count, clt_sum,
+                                   horvitz_thompson_sum, t_quantile)
+from repro.core.join import JoinResult, approx_join
+from repro.core.relation import Relation, relation
+from repro.core.sampling import Strata, build_strata, sample_edges
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,149 @@
+"""The paper's comparison systems (§5/§6, Fig. 1) + shuffle-volume models
+(Appendix A.1, Eq. 18-26).
+
+Implemented baselines:
+
+* ``native_join``     — Spark RDD join: cogroup (no pre-filter) + full
+                        cross-product.  Exact; meters the full shuffle and the
+                        full cross-product op count (the memory blow-up the
+                        paper reports shows up here as the op count).
+* ``repartition_join``— hash-shuffle all tuples, local join.  Exact.
+* ``broadcast_join``  — smaller inputs replicated to every node.  Exact.
+* ``prejoin_sampling``— Fig. 1 "sample inputs, then join": Bernoulli(p) per
+                        input, join the samples, scale by p^-n.  Fast but
+                        statistically broken for stratified outputs (loses
+                        strata; variance blows up) — reproduced on purpose.
+* ``postjoin_sampling``— Fig. 1 "join, then sample": exact join materialized
+                        (op count = full cross product), stratified sample of
+                        the output.  Accurate but slow; also the SnappyData
+                        comparator shape for Fig. 12.
+
+All return :class:`BaselineResult` carrying the estimate and the meters the
+paper plots (shuffled bytes, cross-product ops).  The *volume models* are the
+closed-form Eq. 18-26 used by the Fig. 4 / Fig. 14 benchmarks.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax.numpy as jnp
+
+from repro.core.estimators import Estimate, clt_sum
+from repro.core.hashing import counter_hash, u32
+from repro.core.join import EXPRS, TUPLE_BYTES
+from repro.core.relation import Relation, sort_by_key
+from repro.core.sampling import build_strata, exact_count, sample_edges
+
+
+class BaselineResult(NamedTuple):
+    estimate: jnp.ndarray
+    error_bound: jnp.ndarray
+    count: jnp.ndarray              # join-output cardinality it processed
+    shuffled_bytes: jnp.ndarray     # modeled shuffle volume for this plan
+    cross_product_ops: jnp.ndarray  # pair evaluations performed
+
+
+# --- Appendix A.1 closed-form shuffle-volume models (bytes) -----------------
+
+def volume_broadcast(sizes_bytes: Sequence[float], k: int) -> float:
+    """Eq. 18: all smaller inputs replicated to the k-1 other nodes."""
+    smaller = sorted(sizes_bytes)[:-1]
+    return float(sum(smaller) * (k - 1))
+
+
+def volume_repartition(sizes_bytes: Sequence[float], k: int) -> float:
+    """Eq. 21: every tuple moves with probability (k-1)/k."""
+    return float(sum(sizes_bytes) * (k - 1) / k)
+
+
+def volume_approxjoin(live_bytes: Sequence[float], filter_bytes: float,
+                      k: int) -> float:
+    """Eq. 24: n+1 filter broadcasts + only live tuples repartitioned."""
+    n = len(live_bytes)
+    return float(filter_bytes * (k - 1) * (n + 1)
+                 + sum(live_bytes) * (k - 1) / k)
+
+
+# --- exact baselines ---------------------------------------------------------
+
+def _exact(rels: Sequence[Relation], expr: str, max_strata=None):
+    sorted_rels = [sort_by_key(r) for r in rels]
+    strata = build_strata(sorted_rels, max_strata or rels[0].capacity)
+    _, exact_fn = EXPRS[expr]
+    return exact_fn(sorted_rels, strata), exact_count(strata), strata
+
+
+def native_join(rels: Sequence[Relation], *, expr: str = "sum",
+                k: int = 1) -> BaselineResult:
+    est, cnt, _ = _exact(rels, expr)
+    sizes = [float(r.count()) * TUPLE_BYTES for r in rels]
+    return BaselineResult(est, jnp.zeros(()), cnt,
+                          jnp.asarray(volume_repartition(sizes, max(k, 2))),
+                          cnt)
+
+
+def repartition_join(rels: Sequence[Relation], *, expr: str = "sum",
+                     k: int = 1) -> BaselineResult:
+    est, cnt, _ = _exact(rels, expr)
+    sizes = [float(r.count()) * TUPLE_BYTES for r in rels]
+    return BaselineResult(est, jnp.zeros(()), cnt,
+                          jnp.asarray(volume_repartition(sizes, max(k, 2))),
+                          cnt)
+
+
+def broadcast_join(rels: Sequence[Relation], *, expr: str = "sum",
+                   k: int = 1) -> BaselineResult:
+    est, cnt, _ = _exact(rels, expr)
+    sizes = [float(r.count()) * TUPLE_BYTES for r in rels]
+    return BaselineResult(est, jnp.zeros(()), cnt,
+                          jnp.asarray(volume_broadcast(sizes, max(k, 2))),
+                          cnt)
+
+
+# --- sampling baselines (Fig. 1) ---------------------------------------------
+
+def prejoin_sampling(rels: Sequence[Relation], fraction: float, *,
+                     expr: str = "sum", seed: int = 0,
+                     k: int = 1) -> BaselineResult:
+    """Sample each input Bernoulli(p), join the samples, scale by p^-n.
+
+    This is the strategy the paper shows loses an order of magnitude of
+    accuracy (Fig. 1): strata with few tuples vanish from the sample and the
+    scale-up amplifies whatever survives.
+    """
+    p_u32 = u32(min(max(fraction, 0.0), 1.0) * 0xFFFFFFFF)
+    sampled = []
+    for i, r in enumerate(rels):
+        rows = jnp.arange(r.capacity, dtype=jnp.uint32)
+        keep = counter_hash(seed + 17 * i, r.keys, rows, 3) < p_u32
+        sampled.append(Relation(r.keys, r.values, r.valid & keep))
+    est, cnt, _ = _exact(sampled, expr)
+    scale = (1.0 / max(fraction, 1e-9)) ** len(rels)
+    sizes = [float(r.count()) * TUPLE_BYTES for r in sampled]
+    return BaselineResult(est * scale, jnp.zeros(()), cnt * scale,
+                          jnp.asarray(volume_repartition(sizes, max(k, 2))),
+                          cnt)
+
+
+def postjoin_sampling(rels: Sequence[Relation], fraction: float, *,
+                      expr: str = "sum", seed: int = 0, b_max: int = 4096,
+                      max_strata=None, k: int = 1,
+                      confidence: float = 0.95) -> BaselineResult:
+    """Exact join first, stratified sampleByKey after (Fig. 1 "accurate but
+    slow"; also the SnappyData-shaped comparator of Fig. 12).
+
+    Statistically equals our sampler with b_i = s*B_i over unfiltered inputs;
+    the meters tell the real story: full shuffle + full cross-product ops.
+    """
+    f_fn, _ = EXPRS[expr]
+    sorted_rels = [sort_by_key(r) for r in rels]
+    strata = build_strata(sorted_rels, max_strata or rels[0].capacity)
+    b_i = jnp.ceil(fraction * strata.population)
+    sample = sample_edges(sorted_rels, strata, b_i, b_max, seed, f_fn)
+    est: Estimate = clt_sum(sample.stats, confidence)
+    cnt = exact_count(strata)
+    sizes = [float(r.count()) * TUPLE_BYTES for r in rels]
+    return BaselineResult(est.estimate, est.error_bound, cnt,
+                          jnp.asarray(volume_repartition(sizes, max(k, 2))),
+                          cnt)  # ops: the full cross product was materialized

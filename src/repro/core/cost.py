@@ -1,0 +1,173 @@
+"""Query-budget cost functions (paper §3.2).
+
+Converts a user budget — desired latency or desired error bound — into
+per-stratum sample sizes ``b_i``:
+
+* latency:  Eq. 6/7.  ``s = (d_desired - d_dt - eps) / beta / sum_i B_i``,
+  then ``b_i = s * B_i``.  ``beta_compute`` (seconds per sampled edge) is
+  profiled offline with :func:`calibrate_beta` — the paper's Figure 5
+  microbenchmark, which it finds (and we re-verify) to be linear.
+
+* error bound:  Eq. 9/10.  ``b_i = (z_{a/2} * sigma_i / err)^2`` with
+  ``z_{0.025} = 1.96``.  sigma_i is unknown on first execution; the paper's
+  feedback loop stores the measured per-stratum sigma and reuses it — here a
+  :class:`SigmaRegistry` keyed by (query id, join key), JSON-persistable so
+  the loop survives restarts (feeds the fault-tolerance story).
+
+Both paths are combined (Eq. 11) by taking the per-stratum minimum when the
+user supplies both constraints: latency is a hard budget, the error target is
+met when affordable.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.estimators import t_quantile
+
+
+class CostModel(NamedTuple):
+    """Latency model d_cp = beta_compute * CP_total + epsilon (Eq. 5)."""
+
+    beta_compute: float   # seconds per sampled cross-product row
+    epsilon: float = 0.0  # fixed noise/overhead term
+
+
+def calibrate_beta(sizes=(1 << 14, 1 << 16, 1 << 18), repeats: int = 3,
+                   seed: int = 0) -> CostModel:
+    """Offline cluster profiling (paper Fig. 5): time f-eval over N sampled
+    edges for growing N, fit a line.  Runs on whatever backend is present —
+    the slope is the machine-specific constant the paper calls beta."""
+    rng = np.random.default_rng(seed)
+    xs, ys = [], []
+
+    @jax.jit
+    def work(a, b):
+        return jnp.sum(a + b) + jnp.sum((a + b) ** 2)
+
+    for n in sizes:
+        a = jnp.asarray(rng.random(n, np.float32))
+        b = jnp.asarray(rng.random(n, np.float32))
+        work(a, b).block_until_ready()  # compile
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            work(a, b).block_until_ready()
+        xs.append(n)
+        ys.append((time.perf_counter() - t0) / repeats)
+    slope, intercept = np.polyfit(np.asarray(xs, np.float64),
+                                  np.asarray(ys, np.float64), 1)
+    return CostModel(float(max(slope, 1e-12)), float(max(intercept, 0.0)))
+
+
+def calibrate_pipeline(rels, *, max_strata: int, b_max: int,
+                       fractions=(0.05, 0.4), seed: int = 0) -> CostModel:
+    """Two-point calibration against the REAL sampling pipeline.
+
+    Times the full approx_join sampled path at two pilot fractions and fits
+    d = beta * total_draws + eps.  Captures everything the flat-array
+    microbenchmark (calibrate_beta) misses — grid dispatch, estimator,
+    framework overhead — so the Fig-11 budget fidelity holds on the actual
+    operator."""
+    import time as _time
+
+    from repro.core.budget import QueryBudget
+    from repro.core.join import approx_join
+
+    pts = []
+    for frac in fractions:
+        kw = dict(max_strata=max_strata, b_max=None, seed=seed)
+        res = approx_join(rels, QueryBudget(error=1e9, pilot_fraction=frac),
+                          **kw)  # warm-up: compile this grid bucket
+        jax.block_until_ready(res.estimate)
+        t0 = _time.perf_counter()
+        res = approx_join(rels, QueryBudget(error=1e9, pilot_fraction=frac),
+                          **kw)
+        jax.block_until_ready(res.estimate)
+        pts.append((float(res.diagnostics.sample_draws),
+                    _time.perf_counter() - t0))
+    (x0, y0), (x1, y1) = pts
+    beta = max((y1 - y0) / max(x1 - x0, 1.0), 1e-12)
+    eps = max(y0 - beta * x0, 0.0)
+    return CostModel(beta, eps)
+
+
+def fraction_for_latency(cost: CostModel, d_desired: float, d_dt,
+                         total_population) -> jnp.ndarray:
+    """Eq. 6: the sampling fraction affordable in the remaining time."""
+    d_rem = jnp.maximum(d_desired - d_dt - cost.epsilon, 0.0)
+    cp_total = d_rem / cost.beta_compute
+    s = cp_total / jnp.maximum(jnp.asarray(total_population, jnp.float32), 1.0)
+    return jnp.clip(s, 0.0, 1.0)
+
+
+def sizes_for_latency(cost: CostModel, d_desired: float, d_dt,
+                      population) -> jnp.ndarray:
+    """Eq. 7: b_i = s * B_i (at least 1 draw for non-empty strata)."""
+    s = fraction_for_latency(cost, d_desired, d_dt,
+                             jnp.sum(jnp.asarray(population)))
+    b = jnp.ceil(s * jnp.asarray(population, jnp.float32))
+    return jnp.where(jnp.asarray(population) > 0, jnp.maximum(b, 1.0), 0.0)
+
+
+def sizes_for_error(err_desired: float, sigma, population,
+                    confidence: float = 0.95) -> jnp.ndarray:
+    """Eq. 9/10: b_i = (z * sigma_i / err)^2, capped at B_i draws
+    (beyond B_i with-replacement draws the FPC term is zero anyway)."""
+    z = t_quantile(0.5 + confidence / 2.0, 1e6)  # -> normal quantile
+    b = jnp.ceil((z * jnp.asarray(sigma, jnp.float32)
+                  / max(err_desired, 1e-12)) ** 2)
+    b = jnp.minimum(b, jnp.asarray(population, jnp.float32))
+    return jnp.where(jnp.asarray(population) > 0, jnp.maximum(b, 1.0), 0.0)
+
+
+def predicted_latency(cost: CostModel, b_i, d_dt) -> jnp.ndarray:
+    """Eq. 5 forward model — used by tests/benchmarks for fidelity checks."""
+    return cost.beta_compute * jnp.sum(jnp.asarray(b_i, jnp.float32)) \
+        + cost.epsilon + d_dt
+
+
+@dataclass
+class SigmaRegistry:
+    """Feedback store: per-(query, stratum-key) sigma estimates (§3.2-II).
+
+    First execution -> no entry -> caller falls back to the latency path or a
+    default pilot fraction; after execution :meth:`update` records measured
+    sigmas so subsequent runs can hit the error-bound target directly."""
+
+    table: dict = field(default_factory=dict)
+
+    def lookup(self, query_id: str, keys: np.ndarray,
+               default: float = 1.0) -> np.ndarray:
+        q = self.table.get(query_id, {})
+        return np.asarray([q.get(int(k), default) for k in keys], np.float32)
+
+    def has(self, query_id: str) -> bool:
+        return query_id in self.table
+
+    def update(self, query_id: str, keys, sigmas, valid) -> None:
+        keys = np.asarray(keys)
+        sigmas = np.asarray(sigmas)
+        valid = np.asarray(valid)
+        q = self.table.setdefault(query_id, {})
+        for k, s, v in zip(keys, sigmas, valid):
+            if v:
+                q[int(k)] = float(s)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as fh:
+            json.dump({q: {str(k): v for k, v in t.items()}
+                       for q, t in self.table.items()}, fh)
+
+    @classmethod
+    def load(cls, path: str) -> "SigmaRegistry":
+        with open(path) as fh:
+            raw = json.load(fh)
+        return cls({q: {int(k): float(v) for k, v in t.items()}
+                    for q, t in raw.items()})

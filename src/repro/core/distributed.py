@@ -1,0 +1,283 @@
+"""Distributed ApproxJoin over a JAX device mesh (shard_map).
+
+This is the paper's Spark dataflow (Fig. 7) mapped onto SPMD collectives
+(DESIGN.md §2):
+
+  stage                     Spark                       here
+  ------------------------- --------------------------- ----------------------
+  partition filters          Map at each worker          local bloom.build
+  dataset filter             treeReduce OR to driver     all_gather + OR fold
+                                                         (hierarchical: intra-
+                                                         pod first, then pods)
+  join filter + broadcast    driver AND + broadcast      local AND (replicated)
+  probe + discard            filter() on workers         local probe -> mask
+  cogroup shuffle            hash shuffle                bucketize + all_to_all
+  sampleDuringJoin           per-key edge sampling       vectorized sampler
+  merge partial results      collect at driver           psum of SumParts
+
+Because the shuffle routes every key to exactly one device, strata are
+device-complete afterwards and the per-device estimator parts ADD — the merge
+is a single psum.  The sampler keys its PRNG on the join key, so the sampled
+edges are identical no matter how many devices participated (tested).
+
+Everything is static-shape: the shuffle uses capacity-bounded buckets
+(overflow is counted and surfaced — the feedback path for elastic re-runs).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import bloom
+from repro.core.budget import QueryBudget
+from repro.core.cost import CostModel, fraction_for_latency
+from repro.core.estimators import SumParts, clt_finish, clt_sum_parts
+from repro.core.hashing import hash2, u32
+from repro.core.join import EXPRS, TUPLE_BYTES
+from repro.core.relation import Relation, sort_by_key
+from repro.core.sampling import (build_strata, exact_count,
+                                 exact_sum_of_products, exact_sum_of_sums,
+                                 sample_edges)
+
+
+class DistJoinResult(NamedTuple):
+    estimate: jnp.ndarray
+    error_bound: jnp.ndarray
+    count: jnp.ndarray
+    dof: jnp.ndarray
+    # meters (replicated scalars)
+    shuffled_tuple_bytes: jnp.ndarray   # live tuples that crossed devices
+    filter_bytes: jnp.ndarray           # filter all_gather volume (model)
+    live_total: jnp.ndarray
+    input_total: jnp.ndarray
+    overlap_fraction: jnp.ndarray
+    bucket_overflow: jnp.ndarray
+    strata_overflow: jnp.ndarray
+    total_population: jnp.ndarray
+    sample_draws: jnp.ndarray
+
+
+def _axis_size(axes) -> str:
+    return axes if isinstance(axes, str) else axes
+
+
+def combined_axis_index(axes: Sequence[str]) -> jnp.ndarray:
+    """Linear device index over possibly-multiple mesh axes (major first)."""
+    idx = jnp.zeros((), jnp.int32)
+    for a in axes:
+        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    return idx
+
+
+def or_reduce(words: jnp.ndarray, axes: Sequence[str]) -> jnp.ndarray:
+    """OR-merge partition filters across the mesh (Alg. 1 reduce phase).
+
+    Hierarchical: reduce over the innermost (fast, intra-pod ICI) axis first,
+    then the outer (inter-pod DCN) axis — only one |BF| message crosses the
+    slow link per pod, the treeReduce insight restated for a torus.
+    """
+    for a in reversed(list(axes)):
+        gathered = jax.lax.all_gather(words, a)  # [k_a, nb, W]
+        words = functools.reduce(jnp.bitwise_or,
+                                 [gathered[i] for i in range(gathered.shape[0])])
+    return words
+
+
+def bucketize(rel: Relation, dest: jnp.ndarray, k: int, cap: int):
+    """Scatter live rows into k capacity-bounded send buckets.
+
+    Returns (keys [k, cap], values [k, cap], valid [k, cap], overflow []).
+    Rows are ranked within their destination by sort; rows beyond ``cap`` are
+    dropped and counted (static shapes; same trick as MoE capacity).
+    """
+    n = rel.capacity
+    d = jnp.where(rel.valid, dest, k)                      # invalid -> k
+    order = jnp.argsort(d)                                 # stable
+    ds = d[order]
+    pos = jnp.arange(n, dtype=jnp.int32)
+    is_start = jnp.concatenate([jnp.ones((1,), bool), ds[1:] != ds[:-1]])
+    run_start = jax.lax.cummax(jnp.where(is_start, pos, 0))
+    slot = pos - run_start
+    ok = (ds < k) & (slot < cap)
+    flat = jnp.where(ok, ds * cap + slot, k * cap)
+    keys = jnp.zeros((k * cap + 1,), jnp.uint32).at[flat].set(
+        rel.keys[order], mode="drop")[:-1].reshape(k, cap)
+    vals = jnp.zeros((k * cap + 1,), jnp.float32).at[flat].set(
+        rel.values[order], mode="drop")[:-1].reshape(k, cap)
+    valid = jnp.zeros((k * cap + 1,), bool).at[flat].set(
+        ok, mode="drop")[:-1].reshape(k, cap)
+    overflow = jnp.sum(((ds < k) & (slot >= cap)).astype(jnp.int32))
+    return keys, vals, valid, overflow
+
+
+def shuffle_by_key(rel: Relation, k: int, cap: int, axes: Sequence[str],
+                   seed: int):
+    """Hash-partition a sharded relation so each key lands on one device."""
+    dest = (hash2(rel.keys, seed) % u32(k)).astype(jnp.int32)
+    me = combined_axis_index(axes)
+    sent = rel.valid & (dest != me)
+    keys, vals, valid, overflow = bucketize(rel, dest, k, cap)
+    # Factor the bucket dim as (size(a0), size(a1), ..., cap) and exchange
+    # each factor along ITS mesh axis — the composition is the all_to_all
+    # over the combined (major-first) device index.  Exchanging always on
+    # the leading dim would route the later axes by SOURCE index (bug).
+    sizes = [jax.lax.axis_size(a) for a in axes]
+    recv = []
+    for x in (keys, vals, valid):
+        x = x.reshape(*sizes, cap)
+        for i, a in enumerate(axes):
+            x = jax.lax.all_to_all(x, a, split_axis=i, concat_axis=i,
+                                   tiled=True)
+        recv.append(x.reshape(-1, cap))
+    out = Relation(recv[0].reshape(-1), recv[1].reshape(-1),
+                   recv[2].reshape(-1))
+    return out, jnp.sum(sent.astype(jnp.int32)), overflow
+
+
+def _psum_parts(parts: SumParts, axes) -> SumParts:
+    return SumParts(*[jax.lax.psum(x, axes) for x in parts])
+
+
+def make_distributed_join(mesh: Mesh,
+                          *,
+                          n_rels: int,
+                          join_axes: Sequence[str] = ("data",),
+                          mode: str = "sample",      # 'sample' | 'exact'
+                          filter_stage: bool = True,  # False -> repartition
+                          expr: str = "sum",
+                          fp_rate: float = 0.01,
+                          sample_fraction: Optional[float] = None,
+                          budget: Optional[QueryBudget] = None,
+                          cost_model: Optional[CostModel] = None,
+                          bucket_cap: Optional[int] = None,
+                          max_strata: Optional[int] = None,
+                          b_max: int = 1024,
+                          confidence: float = 0.95,
+                          num_blocks: Optional[int] = None,
+                          seed: int = 0):
+    """Build a jitted SPMD join over ``mesh``.
+
+    The returned callable takes ``n_rels`` global Relations (leading dim
+    sharded over ``join_axes``) plus a traced ``d_dt`` scalar (measured filter
+    latency, feeds the latency cost function) and returns a
+    :class:`DistJoinResult` of replicated scalars.
+
+    Static choices (mode, filtering, capacities) are compile-time — the
+    "driver" decides them; re-compilation on change is the Spark-stage
+    analogue and keeps every device step a fixed dense program.
+    """
+    axes = tuple(join_axes)
+    k = 1
+    for a in axes:
+        k *= mesh.shape[a]
+    f_fn, _ = EXPRS[expr]
+    exact_fn = {"sum": exact_sum_of_sums,
+                "product": exact_sum_of_products}[expr]
+    if budget is not None and budget.latency_s is not None:
+        assert cost_model is not None
+
+    def body(d_dt, *flat):
+        rels = [Relation(*flat[3 * i: 3 * i + 3]) for i in range(n_rels)]
+        local_n = rels[0].capacity
+        nb = num_blocks
+        input_total = jax.lax.psum(
+            sum(r.count() for r in rels), axes)
+
+        # --- stage 1: filter (Alg. 1) ---
+        if filter_stage:
+            ds_words = [or_reduce(bloom.build(r.keys, r.valid, nb, seed).words,
+                                  axes) for r in rels]
+            jf = bloom.BloomFilter(functools.reduce(jnp.bitwise_and, ds_words),
+                                   seed)
+            rels = [Relation(r.keys, r.values,
+                             r.valid & bloom.contains(jf, r.keys))
+                    for r in rels]
+            fbytes = jnp.asarray(nb * bloom.WORDS_PER_BLOCK * 4
+                                 * (k - 1) * (n_rels + 1), jnp.float32)
+        else:
+            fbytes = jnp.zeros((), jnp.float32)
+        live_total = jax.lax.psum(sum(r.count() for r in rels), axes)
+
+        # --- stage 2: shuffle live tuples so strata are device-complete ---
+        # NB: one partitioner for ALL relations (cogroup semantics) — matching
+        # keys must land on the same device or strata never meet.
+        cap = bucket_cap or max(2 * local_n // k, 8)
+        shuffled, sent_counts, overflows = [], [], []
+        for i, r in enumerate(rels):
+            out, sent, ovf = shuffle_by_key(r, k, cap, axes, seed + 101)
+            shuffled.append(out)
+            sent_counts.append(sent)
+            overflows.append(ovf)
+        sent_bytes = jax.lax.psum(sum(sent_counts), axes) * TUPLE_BYTES
+        bucket_overflow = jax.lax.psum(sum(overflows), axes)
+
+        # --- stage 3: local group-by ---
+        sorted_rels = [sort_by_key(r) for r in shuffled]
+        strata = build_strata(sorted_rels, max_strata or k * cap)
+        total_pop = jax.lax.psum(jnp.sum(strata.population), axes)
+        strata_overflow = jax.lax.psum(strata.overflow, axes)
+
+        meters = dict(
+            shuffled_tuple_bytes=sent_bytes.astype(jnp.float32),
+            filter_bytes=fbytes,
+            live_total=live_total.astype(jnp.float32),
+            input_total=input_total.astype(jnp.float32),
+            overlap_fraction=live_total / jnp.maximum(input_total, 1),
+            bucket_overflow=bucket_overflow,
+            strata_overflow=strata_overflow,
+            total_population=total_pop,
+        )
+
+        if mode == "exact":
+            est = jax.lax.psum(exact_fn(sorted_rels, strata), axes)
+            cnt = jax.lax.psum(exact_count(strata), axes)
+            return DistJoinResult(est, jnp.zeros(()), cnt, jnp.zeros(()),
+                                  sample_draws=jnp.zeros(()), **meters)
+
+        # --- stage 4: b_i from the budget (§3.2) ---
+        if sample_fraction is not None:
+            s = jnp.asarray(sample_fraction, jnp.float32)
+        elif budget is not None and budget.latency_s is not None:
+            s = fraction_for_latency(cost_model, budget.latency_s, d_dt,
+                                     total_pop)
+        elif budget is not None and budget.error is not None:
+            s = jnp.asarray(budget.pilot_fraction, jnp.float32)
+        else:
+            raise ValueError("sample mode needs a fraction or a budget")
+        b_i = jnp.where(strata.population > 0,
+                        jnp.maximum(jnp.ceil(s * strata.population), 1.0), 0.0)
+
+        # --- stage 5: sample during join + psum merge (§3.3/§3.4) ---
+        sample = sample_edges(sorted_rels, strata, b_i, b_max, seed + 1, f_fn)
+        parts = _psum_parts(clt_sum_parts(sample.stats), axes)
+        est = clt_finish(parts, confidence)
+        return DistJoinResult(est.estimate, est.error_bound, parts.count,
+                              est.dof,
+                              sample_draws=parts.n_draws, **meters)
+
+    rel_spec = [P(axes), P(axes), P(axes)] * n_rels
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P(), *rel_spec),
+                   out_specs=DistJoinResult(*([P()] * len(DistJoinResult._fields))))
+
+    @jax.jit
+    def run(rels: Sequence[Relation], d_dt=0.0):
+        flat = [x for r in rels for x in (r.keys, r.values, r.valid)]
+        return fn(jnp.asarray(d_dt, jnp.float32), *flat)
+
+    return run
+
+
+def distributed_approx_join(mesh: Mesh, rels: Sequence[Relation],
+                            fp_rate: float = 0.01, **kw) -> DistJoinResult:
+    """Convenience wrapper: size the filter from the inputs and run once."""
+    num_blocks = bloom.num_blocks_for(max(r.capacity for r in rels), fp_rate)
+    run = make_distributed_join(mesh, n_rels=len(rels), fp_rate=fp_rate,
+                                num_blocks=num_blocks, **kw)
+    return run(rels)

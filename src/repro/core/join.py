@@ -1,0 +1,255 @@
+"""ApproxJoin — the paper's operator, end to end (single device).
+
+Pipeline (paper Fig. 2/7):
+
+  1. build a Bloom filter per input                         (§3.1, Alg. 1)
+  2. AND them into the join filter, probe, drop dead tuples (§3.1)
+  3. group surviving tuples into strata (sort + segments)   (§3.3)
+  4. decide: exact join affordable? else pick b_i            (§3.1.1, §3.2)
+  5. stratified edge-sampling during the join               (§3.3, Alg. 2)
+  6. estimate + error bound (CLT or Horvitz-Thompson)       (§3.4)
+
+The orchestration lives in Python (the Spark "driver" role); every stage is a
+jittable pure function (the "executor" role).  The distributed version with
+identical semantics is ``core/distributed.py`` (shard_map over the mesh).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bloom
+from repro.core.budget import QueryBudget
+from repro.core.cost import (CostModel, SigmaRegistry, sizes_for_error,
+                             sizes_for_latency)
+from repro.core.estimators import (Estimate, StratumStats, clt_avg, clt_count,
+                                   clt_stdev, clt_sum, horvitz_thompson_sum)
+from repro.core.relation import Relation, sort_by_key
+from repro.core.sampling import (SampleResult, Strata, build_strata,
+                                 default_f, exact_count, exact_sum_of_products,
+                                 exact_sum_of_sums, sample_edges)
+
+TUPLE_BYTES = 8  # uint32 key + float32 value
+
+
+class JoinDiagnostics(NamedTuple):
+    total_counts: jnp.ndarray       # [n] tuples per input
+    live_counts: jnp.ndarray        # [n] tuples surviving the join filter
+    overlap_fraction: jnp.ndarray   # paper §3.1.1 definition
+    filter_bytes: int               # |BF| bytes (per filter)
+    shuffled_bytes_filtered: jnp.ndarray   # live tuples + filters (ours)
+    shuffled_bytes_repartition: jnp.ndarray  # all tuples (baseline model)
+    num_strata: jnp.ndarray
+    strata_overflow: jnp.ndarray
+    total_population: jnp.ndarray   # sum_i B_i (join output size)
+    sample_draws: jnp.ndarray       # sum_i b_i actually drawn
+    d_filter_s: float               # measured wall time of stage 1-2
+    sampled: bool                   # False -> exact path was taken
+
+
+class JoinResult(NamedTuple):
+    estimate: jnp.ndarray
+    error_bound: jnp.ndarray
+    count: jnp.ndarray              # exact join-output cardinality
+    dof: jnp.ndarray
+    diagnostics: JoinDiagnostics
+    stats: Optional[StratumStats] = None
+    strata: Optional[Strata] = None
+
+
+EXPRS: dict = {
+    "sum": (default_f, exact_sum_of_sums),
+    "product": (lambda vs: jnp.prod(jnp.stack(vs), axis=0),
+                exact_sum_of_products),
+}
+
+
+def build_join_filter(rels: Sequence[Relation], num_blocks: int,
+                      seed: int) -> bloom.BloomFilter:
+    """Alg. 1: per-input filters, AND-merged into the join filter."""
+    filters = [bloom.build(r.keys, r.valid, num_blocks, seed) for r in rels]
+    return bloom.intersect_all(filters)
+
+
+def filter_relations(rels: Sequence[Relation],
+                     join_filter: bloom.BloomFilter) -> list[Relation]:
+    """Probe + discard (the shuffle-avoidance step)."""
+    return [Relation(r.keys, r.values,
+                     r.valid & bloom.contains(join_filter, r.keys))
+            for r in rels]
+
+
+def _pilot_sizes(population, fraction: float) -> jnp.ndarray:
+    b = jnp.ceil(fraction * jnp.asarray(population, jnp.float32))
+    return jnp.where(jnp.asarray(population) > 0, jnp.maximum(b, 1.0), 0.0)
+
+
+def decide_sample_sizes(budget: QueryBudget, strata: Strata,
+                        cost_model: Optional[CostModel], d_dt: float,
+                        sigma: Optional[np.ndarray],
+                        confidence: float) -> jnp.ndarray:
+    """§3.2: budget -> per-stratum b_i.  Latency and error combine by min."""
+    population = strata.population
+    b = None
+    if budget.error is not None:
+        if sigma is not None:
+            b = sizes_for_error(budget.error, sigma, population, confidence)
+        else:  # first execution: pilot run at a fixed fraction (§3.2-II)
+            b = _pilot_sizes(population, budget.pilot_fraction)
+    if budget.latency_s is not None:
+        assert cost_model is not None, "latency budget needs a CostModel"
+        bl = sizes_for_latency(cost_model, budget.latency_s, d_dt, population)
+        b = bl if b is None else jnp.minimum(b, bl)
+    assert b is not None
+    return b
+
+
+def measured_sigma(stats: StratumStats) -> jnp.ndarray:
+    """Per-stratum sigma estimate fed back into the SigmaRegistry."""
+    b = jnp.maximum(stats.n_sampled, 1.0)
+    r2 = (stats.sum_f2 - stats.sum_f**2 / b) / jnp.maximum(b - 1.0, 1.0)
+    return jnp.sqrt(jnp.maximum(r2, 0.0))
+
+
+def approx_join(rels: Sequence[Relation],
+                budget: QueryBudget = QueryBudget(),
+                *,
+                agg: str = "sum",
+                expr: str = "sum",
+                f: Optional[Callable] = None,
+                seed: int = 0,
+                fp_rate: float = 0.01,
+                max_strata: Optional[int] = None,
+                b_max: Optional[int] = 2048,
+                cost_model: Optional[CostModel] = None,
+                sigma_registry: Optional[SigmaRegistry] = None,
+                query_id: str = "q0",
+                dedup: bool = False,
+                use_kernels: bool = False) -> JoinResult:
+    """The paper's approxjoin() (§4): join + aggregate within a budget.
+
+    ``expr`` selects f over joined values ('sum' -> v1+...+vn); ``agg`` is the
+    outer aggregate ('sum' | 'count' | 'avg').  ``dedup=True`` removes
+    duplicate edges and switches to the Horvitz-Thompson estimator.
+    ``use_kernels=True`` routes filter build/probe and the (two-way,
+    non-dedup) sampler through the Pallas kernels (kernels/ops.py) —
+    bit-identical results, fused VMEM execution on TPU.
+    """
+    f_fn, exact_fn = EXPRS[expr] if f is None else (f, None)
+    n = len(rels)
+    total_counts = jnp.stack([r.count() for r in rels])
+    max_n = max(r.capacity for r in rels)
+
+    # --- stage 1: filtering (timed: feeds d_dt in the latency cost fn) ---
+    t0 = time.perf_counter()
+    num_blocks = bloom.num_blocks_for(max_n, fp_rate)
+    if use_kernels:
+        from repro.kernels import ops as kops
+        interp = kops.use_interpret()
+        filters = [kops.build_filter(r.keys, r.valid, num_blocks, seed,
+                                     interpret=interp) for r in rels]
+        join_filter = bloom.intersect_all(filters)
+        live = [Relation(r.keys, r.values,
+                         r.valid & kops.probe_filter(join_filter.words,
+                                                     r.keys, seed,
+                                                     interpret=interp))
+                for r in rels]
+    else:
+        join_filter = build_join_filter(rels, num_blocks, seed)
+        live = filter_relations(rels, join_filter)
+    live_counts = jnp.stack([r.count() for r in live])
+    sorted_rels = [sort_by_key(r) for r in live]
+    strata = build_strata(sorted_rels, max_strata or rels[0].capacity)
+    jax.block_until_ready(strata.counts)
+    d_filter = time.perf_counter() - t0
+
+    population = strata.population
+    total_pop = jnp.sum(population)
+    overlap = jnp.sum(live_counts) / jnp.maximum(jnp.sum(total_counts), 1)
+    fbytes = num_blocks * bloom.WORDS_PER_BLOCK * 4
+    diag = dict(
+        total_counts=total_counts, live_counts=live_counts,
+        overlap_fraction=overlap, filter_bytes=fbytes,
+        shuffled_bytes_filtered=jnp.sum(live_counts) * TUPLE_BYTES
+        + fbytes * (n + 1),
+        shuffled_bytes_repartition=jnp.sum(total_counts) * TUPLE_BYTES,
+        num_strata=strata.num_strata, strata_overflow=strata.overflow,
+        total_population=total_pop, d_filter_s=d_filter,
+    )
+
+    # --- stage 2: exact fast path (§3.1.1 "is filtering sufficient?") ---
+    exact_affordable = budget.is_exact or (
+        budget.latency_s is not None and cost_model is not None
+        and exact_fn is not None
+        and float(cost_model.beta_compute) * float(total_pop)
+        + cost_model.epsilon + d_filter <= budget.latency_s
+        and budget.error is None)
+    if exact_affordable:
+        assert exact_fn is not None, "exact path needs a separable expr"
+        est = exact_fn(sorted_rels, strata)
+        cnt = exact_count(strata)
+        if agg == "count":
+            est = cnt
+        elif agg == "avg":
+            est = est / jnp.maximum(cnt, 1.0)
+        return JoinResult(est, jnp.zeros(()), cnt, jnp.zeros(()),
+                          JoinDiagnostics(sample_draws=jnp.zeros(()),
+                                          sampled=False, **diag),
+                          strata=strata)
+
+    # --- stage 3: budget -> b_i (§3.2) ---
+    sigma = None
+    if (budget.error is not None and sigma_registry is not None
+            and sigma_registry.has(query_id)):
+        keys = np.asarray(jax.device_get(strata.keys))
+        sigma = sigma_registry.lookup(query_id, keys)
+    b_i = decide_sample_sizes(budget, strata, cost_model, d_filter, sigma,
+                              budget.confidence)
+    if b_max is None:
+        # adaptive grid: the driver sizes the static [S, b_max] draw grid
+        # from the budget (pow2-bucketed to bound recompiles).  Without
+        # this, latency is flat in b_i and the latency cost function can't
+        # steer (found via the Fig-11 fidelity bench; see EXPERIMENTS.md).
+        peak = int(jax.device_get(jnp.max(b_i)))
+        b_max = max(64, 1 << (min(peak, 8192) - 1).bit_length())
+
+    # --- stage 4+5: sample during join + estimate (§3.3, §3.4) ---
+    if use_kernels and not dedup and n == 2 and f is None:
+        from repro.kernels import ops as kops
+        stats = kops.sample_stats(sorted_rels, strata, b_i, b_max, seed + 1,
+                                  expr)
+        sample = SampleResult(stats, stats.sum_f * 0, stats.sum_f * 0,
+                              jnp.zeros((1, 1)), jnp.zeros((1, 1), bool))
+    else:
+        sample = sample_edges(sorted_rels, strata, b_i, b_max, seed + 1, f_fn)
+    if dedup:
+        est = horvitz_thompson_sum(sample.stats, sample.unique_f,
+                                   sample.unique_count, budget.confidence)
+    elif agg == "avg":
+        est = clt_avg(sample.stats, budget.confidence)
+    elif agg == "stdev":
+        est = clt_stdev(sample.stats, budget.confidence)
+    else:
+        est = clt_sum(sample.stats, budget.confidence)
+    cnt = clt_count(sample.stats)
+    value = cnt if agg == "count" else est.estimate
+    err = jnp.zeros(()) if agg == "count" else est.error_bound
+
+    # --- feedback: store measured sigma for the next execution (§3.2-II) ---
+    if sigma_registry is not None:
+        sig = np.asarray(jax.device_get(measured_sigma(sample.stats)))
+        keys = np.asarray(jax.device_get(strata.keys))
+        ok = np.asarray(jax.device_get(sample.stats.valid
+                                       & (sample.stats.n_sampled > 1)))
+        sigma_registry.update(query_id, keys, sig, ok)
+
+    return JoinResult(value, err, cnt, est.dof,
+                      JoinDiagnostics(
+                          sample_draws=jnp.sum(sample.stats.n_sampled),
+                          sampled=True, **diag),
+                      stats=sample.stats, strata=strata)

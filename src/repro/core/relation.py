@@ -1,0 +1,96 @@
+"""Static-shape relations.
+
+A :class:`Relation` is the TPU-native stand-in for an RDD of key/value pairs:
+dense ``keys``/``values`` arrays plus a ``valid`` mask (JAX needs static
+shapes, so "fewer rows" is expressed by masking, and every pipeline stage is a
+dense pass — the same constraint the paper faces on HDFS, where random access
+is off the table).
+
+Values are a single float column; the aggregation queries the paper targets
+(SUM / COUNT / AVG / STDEV over an expression of the joined values, §2) only
+need one numeric column per side.  Multi-column payloads ride along as extra
+Relations with the same keys.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Relation(NamedTuple):
+    """A (possibly sharded) key/value relation with a validity mask."""
+
+    keys: jnp.ndarray    # uint32 [N]
+    values: jnp.ndarray  # float32 [N]
+    valid: jnp.ndarray   # bool    [N]
+
+    @property
+    def capacity(self) -> int:
+        return self.keys.shape[0]
+
+    def count(self) -> jnp.ndarray:
+        return jnp.sum(self.valid.astype(jnp.int32))
+
+    def masked_keys(self, fill: int = 0xFFFFFFFF) -> jnp.ndarray:
+        """Keys with invalid slots replaced by ``fill`` (sorts to the end)."""
+        return jnp.where(self.valid, self.keys, jnp.uint32(fill))
+
+
+def relation(keys, values=None, valid=None) -> Relation:
+    """Build a Relation from array-likes, filling defaults."""
+    keys = jnp.asarray(keys, dtype=jnp.uint32)
+    if values is None:
+        values = jnp.zeros(keys.shape, jnp.float32)
+    values = jnp.asarray(values, dtype=jnp.float32)
+    if valid is None:
+        valid = jnp.ones(keys.shape, bool)
+    valid = jnp.asarray(valid, dtype=bool)
+    assert keys.shape == values.shape == valid.shape and keys.ndim == 1
+    return Relation(keys, values, valid)
+
+
+def pad_to(rel: Relation, capacity: int) -> Relation:
+    """Pad a relation with invalid rows up to ``capacity``."""
+    n = rel.capacity
+    if n == capacity:
+        return rel
+    assert n < capacity, f"cannot shrink relation {n} -> {capacity}"
+    pad = capacity - n
+    return Relation(
+        jnp.concatenate([rel.keys, jnp.zeros((pad,), jnp.uint32)]),
+        jnp.concatenate([rel.values, jnp.zeros((pad,), jnp.float32)]),
+        jnp.concatenate([rel.valid, jnp.zeros((pad,), bool)]),
+    )
+
+
+def sort_by_key(rel: Relation) -> Relation:
+    """Sort valid rows by key; invalid rows go last (stable)."""
+    order = jnp.argsort(rel.masked_keys())
+    return Relation(rel.keys[order], rel.values[order], rel.valid[order])
+
+
+def concatenate(rels: list[Relation]) -> Relation:
+    return Relation(
+        jnp.concatenate([r.keys for r in rels]),
+        jnp.concatenate([r.values for r in rels]),
+        jnp.concatenate([r.valid for r in rels]),
+    )
+
+
+def shard_rows(rel: Relation, num_shards: int) -> Relation:
+    """Reshape [N] -> [num_shards, N/num_shards] for shard_map feeding."""
+    assert rel.capacity % num_shards == 0
+    f = lambda x: x.reshape(num_shards, -1)
+    return Relation(f(rel.keys), f(rel.values), f(rel.valid))
+
+
+def to_numpy(rel: Relation):
+    """(keys, values) of the valid rows as host numpy arrays (test helper)."""
+    k = np.asarray(jax.device_get(rel.keys))
+    v = np.asarray(jax.device_get(rel.values))
+    m = np.asarray(jax.device_get(rel.valid))
+    return k[m], v[m]

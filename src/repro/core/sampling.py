@@ -1,0 +1,234 @@
+"""Stratified sampling *during* the join (paper §3.3, Algorithm 2).
+
+The join of n relations on key C_i is the complete n-partite graph over the
+per-side tuple groups; sampling the join output = sampling edges from that
+graph without materializing it.  Per stratum (join key) we draw ``b_i`` edges
+by picking one endpoint per side with a counter-based stateless hash:
+
+    idx_side = start_side + counter_hash(seed, key, draw, side) % count_side
+
+Everything is vectorized over a static [S, b_max] grid (S = strata capacity,
+b_max = per-stratum draw capacity) — there is no per-key loop, matching the
+"dense pass" TPU constraint (DESIGN.md §2).  Draws are keyed by the *join key*
+(not the stratum index), so the sample is invariant to how tuples were
+partitioned across devices — the coordination-free property the paper needs
+for distributed sampling, made exact here.
+
+The group-by machinery (``build_strata``) identifies strata from the sorted
+lead relation and locates each stratum's segment in every side with
+``searchsorted`` — O(N log N), no hash tables, no dynamic shapes.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Sequence
+
+import jax.numpy as jnp
+
+from repro.core.estimators import StratumStats
+from repro.core.hashing import GOLDEN, bounded, counter_hash, fmix32, u32
+from repro.core.relation import Relation
+
+SENTINEL = 0xFFFFFFFF  # invalid-row key fill; real keys must be < 2^32 - 1
+
+
+class Strata(NamedTuple):
+    """Join strata: one row per distinct key of the (sorted) lead relation.
+
+    ``starts``/``counts`` are [n_sides, S]: the segment of each stratum in
+    each side's sorted key array.  ``joinable`` marks strata present (count>0)
+    on every side — only those produce join output.
+    """
+
+    keys: jnp.ndarray      # uint32 [S]
+    valid: jnp.ndarray     # bool   [S] stratum slot holds a real key
+    starts: jnp.ndarray    # int32  [n_sides, S]
+    counts: jnp.ndarray    # int32  [n_sides, S]
+    overflow: jnp.ndarray  # int32  [] strata beyond capacity S (diagnostic)
+
+    @property
+    def joinable(self) -> jnp.ndarray:
+        return self.valid & jnp.all(self.counts > 0, axis=0)
+
+    @property
+    def population(self) -> jnp.ndarray:
+        """B_i — join-output size per stratum (product of side counts)."""
+        p = jnp.prod(jnp.maximum(self.counts, 0).astype(jnp.float32), axis=0)
+        return jnp.where(self.joinable, p, 0.0)
+
+    @property
+    def num_strata(self) -> jnp.ndarray:
+        """m — number of joinable strata."""
+        return jnp.sum(self.joinable.astype(jnp.int32))
+
+
+def _segment(sorted_keys: jnp.ndarray, stratum_keys: jnp.ndarray):
+    start = jnp.searchsorted(sorted_keys, stratum_keys, side="left")
+    end = jnp.searchsorted(sorted_keys, stratum_keys, side="right")
+    return start.astype(jnp.int32), (end - start).astype(jnp.int32)
+
+
+def build_strata(sorted_rels: Sequence[Relation], max_strata: int) -> Strata:
+    """Identify strata from sorted_rels[0]; locate segments in every side.
+
+    All relations must already be sorted by ``masked_keys()`` (invalid rows
+    filled with SENTINEL sort last).  Strata beyond ``max_strata`` are counted
+    in ``overflow`` (they are dropped; callers size S = key capacity to make
+    this impossible in exact mode).
+    """
+    lead = sorted_rels[0]
+    mk = lead.masked_keys(SENTINEL)
+    first = jnp.ones((1,), bool) if mk.shape[0] else jnp.zeros((0,), bool)
+    is_start = lead.valid & jnp.concatenate([first, mk[1:] != mk[:-1]])
+    sid = jnp.cumsum(is_start.astype(jnp.int32)) - 1  # stratum index per row
+    total = jnp.sum(is_start.astype(jnp.int32))
+    S = max_strata
+    slot = jnp.where(is_start & (sid < S), sid, S)  # overflow -> row S
+    keys = jnp.full((S + 1,), SENTINEL, jnp.uint32).at[slot].set(mk,
+                                                                 mode="drop")
+    keys = keys[:S]
+    valid = jnp.arange(S) < jnp.minimum(total, S)
+    keys = jnp.where(valid, keys, u32(SENTINEL))
+    starts, counts = [], []
+    for r in sorted_rels:
+        s, c = _segment(r.masked_keys(SENTINEL), keys)
+        starts.append(s)
+        counts.append(jnp.where(valid, c, 0))
+    return Strata(keys, valid,
+                  jnp.stack(starts), jnp.stack(counts),
+                  jnp.maximum(total - S, 0))
+
+
+def edge_indices(strata: Strata, b_max: int, seed) -> jnp.ndarray:
+    """Draw endpoint indices for every (stratum, draw, side).
+
+    Returns int32 [n_sides, S, b_max] — absolute row indices into each side's
+    sorted arrays.  Pure function of (seed, join key, draw counter, side):
+    deterministic, replayable, partition-invariant.
+    """
+    n_sides, S = strata.starts.shape
+    t = jnp.arange(b_max, dtype=jnp.uint32)[None, :]          # [1, b_max]
+    keys = strata.keys[:, None]                               # [S, 1]
+    idx = []
+    for side in range(n_sides):
+        h = counter_hash(seed, keys, t, side)                 # [S, b_max]
+        cnt = jnp.maximum(strata.counts[side], 1)[:, None]
+        idx.append(strata.starts[side][:, None] + bounded(h, cnt))
+    return jnp.stack(idx)
+
+
+def edge_id(idx_in_stratum: jnp.ndarray) -> jnp.ndarray:
+    """Collision-resistant id of an edge from per-side in-stratum offsets.
+
+    [n_sides, S, b_max] -> uint32 [S, b_max].  Hash-combined (a true mixed
+    radix id can overflow u32 for large strata); collision probability within
+    a stratum is ~b_max^2 / 2^33 — negligible at our draw capacities and only
+    used for the HT dedup path (documented in DESIGN.md §8).
+    """
+    h = u32(0)
+    for side in range(idx_in_stratum.shape[0]):
+        h = fmix32(h * u32(GOLDEN) ^ u32(idx_in_stratum[side]))
+    return h
+
+
+class SampleResult(NamedTuple):
+    stats: StratumStats       # with-replacement sufficient statistics
+    unique_f: jnp.ndarray     # [S] sum of f over *distinct* edges (HT path)
+    unique_count: jnp.ndarray # [S] number of distinct edges
+    f_values: jnp.ndarray     # [S, b_max] sampled f(edge) (0 where masked)
+    mask: jnp.ndarray         # bool [S, b_max] draw validity
+
+
+def default_f(values: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """The paper's running aggregate: SUM(R1.V + R2.V + ... + Rn.V)."""
+    out = values[0]
+    for v in values[1:]:
+        out = out + v
+    return out
+
+
+def sample_edges(sorted_rels: Sequence[Relation], strata: Strata,
+                 b_i: jnp.ndarray, b_max: int, seed,
+                 f: Callable[[Sequence[jnp.ndarray]], jnp.ndarray]
+                 = default_f) -> SampleResult:
+    """Algorithm 2, vectorized: draw, gather, aggregate per stratum.
+
+    ``b_i`` is float/int [S] — the per-stratum budget from the cost function
+    (§3.2); actual draws are ``min(b_i, b_max)`` over joinable strata.
+    """
+    S = strata.keys.shape[0]
+    idx = edge_indices(strata, b_max, seed)                   # [n, S, b_max]
+    vals = [r.values[idx[side]] for side, r in enumerate(sorted_rels)]
+    fv = f(vals)                                              # [S, b_max]
+    t = jnp.arange(b_max, dtype=jnp.float32)[None, :]
+    mask = (t < jnp.asarray(b_i, jnp.float32)[:, None]) & \
+        strata.joinable[:, None]
+    fm = jnp.where(mask, fv, 0.0)
+    n_sampled = jnp.sum(mask, axis=1, dtype=jnp.float32)
+    stats = StratumStats(
+        valid=strata.joinable,
+        population=strata.population,
+        n_sampled=n_sampled,
+        sum_f=jnp.sum(fm, axis=1),
+        sum_f2=jnp.sum(fm * fm, axis=1),
+    )
+    # --- dedup path (Horvitz-Thompson, §3.4-II) ---
+    eid = edge_id(idx - strata.starts[:, :, None])            # [S, b_max]
+    eid = jnp.where(mask, eid, u32(SENTINEL))
+    order = jnp.argsort(eid, axis=1)
+    eid_s = jnp.take_along_axis(eid, order, axis=1)
+    fv_s = jnp.take_along_axis(fm, order, axis=1)
+    first = jnp.concatenate(
+        [jnp.ones((S, 1), bool), eid_s[:, 1:] != eid_s[:, :-1]], axis=1)
+    keep = first & (eid_s != u32(SENTINEL))
+    unique_f = jnp.sum(jnp.where(keep, fv_s, 0.0), axis=1)
+    unique_count = jnp.sum(keep, axis=1, dtype=jnp.float32)
+    return SampleResult(stats, unique_f, unique_count, fm, mask)
+
+
+# ---------------------------------------------------------------------------
+# Exact aggregates from sufficient statistics (DESIGN.md §2, beyond-paper).
+# The cartesian structure of the join makes SUM-type aggregates separable:
+#   sum over edges of  sum_k v_k  =  sum_k ( S_k * prod_{j != k} B_j )
+#   sum over edges of prod_k v_k  =  prod_k S_k
+# computed per stratum in one segment-sum pass — O(N), no cross product.
+# Used as the oracle in tests and as the exact fast path when no budget is
+# given and the overlap is large.
+# ---------------------------------------------------------------------------
+
+def _per_stratum_value_sums(sorted_rels, strata) -> jnp.ndarray:
+    """[n_sides, S] sum of values per stratum per side (prefix-sum trick)."""
+    sums = []
+    for side, r in enumerate(sorted_rels):
+        csum = jnp.concatenate(
+            [jnp.zeros((1,), jnp.float32),
+             jnp.cumsum(jnp.where(r.valid, r.values, 0.0))])
+        s0 = strata.starts[side]
+        s1 = s0 + strata.counts[side]
+        sums.append(csum[s1] - csum[s0])
+    return jnp.stack(sums)
+
+
+def exact_sum_of_sums(sorted_rels, strata) -> jnp.ndarray:
+    """Exact SUM(v_1 + ... + v_n) over the join output."""
+    S_k = _per_stratum_value_sums(sorted_rels, strata)        # [n, S]
+    B_k = jnp.maximum(strata.counts, 0).astype(jnp.float32)   # [n, S]
+    total_B = strata.population                               # [S]
+    per_stratum = jnp.zeros_like(total_B)
+    n = S_k.shape[0]
+    for k in range(n):
+        prod_others = jnp.where(B_k[k] > 0, total_B / jnp.maximum(B_k[k], 1.0),
+                                0.0)
+        per_stratum = per_stratum + S_k[k] * prod_others
+    return jnp.sum(jnp.where(strata.joinable, per_stratum, 0.0))
+
+
+def exact_sum_of_products(sorted_rels, strata) -> jnp.ndarray:
+    """Exact SUM(v_1 * ... * v_n) over the join output."""
+    S_k = _per_stratum_value_sums(sorted_rels, strata)
+    per_stratum = jnp.prod(S_k, axis=0)
+    return jnp.sum(jnp.where(strata.joinable, per_stratum, 0.0))
+
+
+def exact_count(strata: Strata) -> jnp.ndarray:
+    return jnp.sum(strata.population)

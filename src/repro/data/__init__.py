@@ -1,0 +1,4 @@
+"""Data substrates: the paper's evaluation datasets (synthetic Poisson,
+TPC-H-lite, CAIDA-like flows, Netflix-like ratings) and the LM token pipeline
+that feeds the training examples (deterministic per (step, shard) — any host
+can regenerate any shard after a failure)."""

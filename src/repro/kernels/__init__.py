@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (DESIGN.md §7):
+
+  bloom_build  — filter hash computation (scatter-OR commit in the wrapper)
+  bloom_probe  — VMEM-resident join-filter membership probe (per-tuple hot path)
+  edge_sample  — fused Algorithm-2 sampler (draw -> gather -> f -> reduce)
+
+``ops`` holds the jit'd wrappers; ``ref`` the pure-jnp oracles.  Validated in
+interpret mode on CPU; Mosaic-compiled on a TPU backend.
+"""

@@ -1,0 +1,49 @@
+"""Pallas kernel: Bloom-filter hash computation (build side, Alg. 1 map).
+
+Grid over key blocks; each step loads a [BLOCK] slice of keys into VMEM and
+emits the (block index, 8-lane bit masks) pair for every key — pure VPU
+integer math (murmur3 finalizer + multiply-shift lane hashes), no memory
+traffic beyond the streaming key blocks.
+
+The scatter-OR that folds these pairs into the packed filter runs in the jit
+wrapper (XLA scatter): TPU Pallas has no scatter atomics, so committing the
+bits from inside the kernel would serialize the grid.  This is the documented
+GPU->TPU semantic change (DESIGN.md §2): the paper's per-worker loop becomes
+hash-kernel + one XLA scatter pass.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import bloom
+
+DEFAULT_BLOCK = 2048
+
+
+def _kernel(keys_ref, blk_ref, masks_ref, *, num_blocks: int, seed: int):
+    keys = keys_ref[...]
+    blk_ref[...] = bloom.block_index(keys, num_blocks, seed)
+    masks_ref[...] = bloom.lane_masks(keys, seed)
+
+
+def bloom_hashes(keys: jnp.ndarray, num_blocks: int, seed: int = 0,
+                 block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """(block_index int32 [N], lane_masks uint32 [N, 8]); N % block == 0."""
+    n = keys.shape[0]
+    assert n % block == 0, f"pad keys to a multiple of {block} (got {n})"
+    grid = (n // block,)
+    return pl.pallas_call(
+        functools.partial(_kernel, num_blocks=num_blocks, seed=seed),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                   pl.BlockSpec((block, 8), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32),
+                   jax.ShapeDtypeStruct((n, 8), jnp.uint32)],
+        interpret=interpret,
+    )(keys)

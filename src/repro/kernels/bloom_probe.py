@@ -1,0 +1,58 @@
+"""Pallas kernel: join-filter membership probe (the filter hot path).
+
+Every tuple of every input probes the join filter once (§3.1), so this is
+the paper's dominant per-tuple cost.  Layout:
+
+  * the packed filter ([num_blocks, 8] uint32) stays RESIDENT in VMEM across
+    the whole grid (BlockSpec index_map pins it to (0, 0)) — it is small by
+    construction (Eq. 27: ~1.2 bytes/key at 1% FPR) and every key touches one
+    random 256-bit block of it, which is exactly what VMEM is for;
+  * keys stream through in [BLOCK] slices (double-buffered by Pallas);
+  * per key: one VMEM gather of its 8-word block + lane-mask compare — no
+    HBM round-trips per probe, unlike the GPU pointer-chase formulation.
+
+VMEM budget: filter <= ~8 MiB (num_blocks <= 2^18 = 8 Mi keys at 1% FPR per
+shard) + 3 small key/output blocks.  The wrapper asserts this.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import bloom
+
+DEFAULT_BLOCK = 2048
+VMEM_FILTER_LIMIT = 8 * 1024 * 1024  # bytes of VMEM we allow the filter
+
+
+def _kernel(words_ref, keys_ref, out_ref, *, num_blocks: int, seed: int):
+    keys = keys_ref[...]
+    blk = bloom.block_index(keys, num_blocks, seed)
+    masks = bloom.lane_masks(keys, seed)
+    words = words_ref[...]              # [num_blocks, 8], VMEM-resident
+    gathered = words[blk]               # [BLOCK, 8] vector gather in VMEM
+    out_ref[...] = jnp.all((gathered & masks) == masks, axis=-1)
+
+
+def bloom_probe(words: jnp.ndarray, keys: jnp.ndarray, seed: int = 0,
+                block: int = DEFAULT_BLOCK,
+                interpret: bool = True) -> jnp.ndarray:
+    """Membership mask bool [N] for keys against the packed filter words."""
+    n = keys.shape[0]
+    nb = words.shape[0]
+    assert n % block == 0, f"pad keys to a multiple of {block} (got {n})"
+    assert nb * 8 * 4 <= VMEM_FILTER_LIMIT, \
+        f"filter too large for VMEM residency: {nb * 32} bytes"
+    return pl.pallas_call(
+        functools.partial(_kernel, num_blocks=nb, seed=seed),
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((nb, 8), lambda i: (0, 0)),  # pinned filter
+                  pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.bool_),
+        interpret=interpret,
+    )(words, keys)

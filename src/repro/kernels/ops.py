@@ -1,0 +1,97 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Handles padding to block multiples, the scatter-OR commit for the build
+kernel, StratumStats assembly for the sampler, and the interpret-mode switch
+(this container is CPU-only; on a TPU backend the kernels compile to Mosaic).
+Every wrapper has a pure-jnp oracle in ``kernels/ref.py`` and the swap is
+tested bit-exact.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bloom
+from repro.core.estimators import StratumStats
+from repro.core.relation import Relation
+from repro.core.sampling import Strata
+from repro.kernels import bloom_build as _build
+from repro.kernels import bloom_probe as _probe
+from repro.kernels import edge_sample as _edge
+
+
+def use_interpret() -> bool:
+    """Pallas interpret mode unless we are actually on TPU (env-overridable)."""
+    forced = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if forced is not None:
+        return forced not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def _pad1(x: jnp.ndarray, mult: int, fill=0):
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    return jnp.concatenate([x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)])
+
+
+@functools.partial(jax.jit, static_argnames=("num_blocks", "seed", "interpret"))
+def build_filter(keys: jnp.ndarray, valid: jnp.ndarray, num_blocks: int,
+                 seed: int = 0, interpret: bool = True) -> bloom.BloomFilter:
+    """Kernel-backed bloom.build: hash kernel + XLA scatter-OR commit."""
+    n = keys.shape[0]
+    kp = _pad1(keys, _build.DEFAULT_BLOCK)
+    blk, masks = _build.bloom_hashes(kp, num_blocks, seed,
+                                     interpret=interpret)
+    return bloom.scatter_or(blk[:n], masks[:n], valid, num_blocks, seed)
+
+
+@functools.partial(jax.jit, static_argnames=("seed", "interpret"))
+def probe_filter(words: jnp.ndarray, keys: jnp.ndarray, seed: int = 0,
+                 interpret: bool = True) -> jnp.ndarray:
+    """Kernel-backed bloom.contains."""
+    n = keys.shape[0]
+    kp = _pad1(keys, _probe.DEFAULT_BLOCK)
+    return _probe.bloom_probe(words, kp, seed, interpret=interpret)[:n]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("b_max", "seed", "expr", "interpret"))
+def sample_stats_2way(values1: jnp.ndarray, values2: jnp.ndarray,
+                      strata_keys: jnp.ndarray,
+                      starts: jnp.ndarray, counts: jnp.ndarray,
+                      joinable: jnp.ndarray, population: jnp.ndarray,
+                      b_i: jnp.ndarray, b_max: int, seed: int = 0,
+                      expr: str = "sum",
+                      interpret: bool = True) -> StratumStats:
+    """Kernel-backed two-way Algorithm-2 pass returning StratumStats."""
+    S = strata_keys.shape[0]
+    pad = functools.partial(_pad1, mult=_edge.S_BLOCK)
+    n, sf, sf2 = _edge.edge_sample(
+        values1, values2,
+        pad(strata_keys), pad(starts[0]), pad(counts[0]),
+        pad(starts[1]), pad(counts[1]),
+        pad(joinable), pad(b_i.astype(jnp.float32)),
+        b_max, seed, expr, interpret=interpret)
+    return StratumStats(valid=joinable, population=population,
+                        n_sampled=n[:S], sum_f=sf[:S], sum_f2=sf2[:S])
+
+
+def sample_stats(sorted_rels: Sequence[Relation], strata: Strata,
+                 b_i: jnp.ndarray, b_max: int, seed: int = 0,
+                 expr: str = "sum", interpret: bool | None = None) -> StratumStats:
+    """Convenience: Strata-level entry point (two-way only)."""
+    assert len(sorted_rels) == 2, "kernel path is two-way; use core.sampling"
+    if interpret is None:
+        interpret = use_interpret()
+    return sample_stats_2way(
+        sorted_rels[0].values, sorted_rels[1].values,
+        strata.keys, strata.starts, strata.counts,
+        strata.joinable, strata.population,
+        b_i, b_max, seed, expr, interpret)

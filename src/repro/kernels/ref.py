@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are thin re-exports/wrappers around the core implementations so the
+kernel tests assert against the *same* code the rest of the system uses —
+bit-identical uint32 hashing guarantees the kernels can be swapped in
+anywhere (``kernels/ops.py`` is the switch).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import bloom
+from repro.core.hashing import bounded, counter_hash
+
+
+def bloom_hashes_ref(keys: jnp.ndarray, num_blocks: int, seed):
+    """(block_index int32 [N], lane_masks uint32 [N, 8]) for each key."""
+    return (bloom.block_index(keys, num_blocks, seed),
+            bloom.lane_masks(keys, seed))
+
+
+def bloom_probe_ref(words: jnp.ndarray, keys: jnp.ndarray,
+                    seed) -> jnp.ndarray:
+    """Membership mask bool [N] against packed filter words [nb, 8]."""
+    return bloom.contains(bloom.BloomFilter(words, seed), keys)
+
+
+def edge_sample_ref(values1: jnp.ndarray, values2: jnp.ndarray,
+                    keys: jnp.ndarray,
+                    start1: jnp.ndarray, count1: jnp.ndarray,
+                    start2: jnp.ndarray, count2: jnp.ndarray,
+                    joinable: jnp.ndarray, b_i: jnp.ndarray,
+                    b_max: int, seed, expr: str = "sum"):
+    """Two-way Algorithm-2 sampler: per-stratum (n, sum_f, sum_f2).
+
+    The oracle materializes the [S, b_max] draw grid (exactly what the Pallas
+    kernel avoids doing in HBM) — same math, same hashes.
+    """
+    t = jnp.arange(b_max, dtype=jnp.uint32)[None, :]
+    k = keys[:, None]
+    h1 = counter_hash(seed, k, t, 0)
+    h2 = counter_hash(seed, k, t, 1)
+    i1 = start1[:, None] + bounded(h1, jnp.maximum(count1, 1)[:, None])
+    i2 = start2[:, None] + bounded(h2, jnp.maximum(count2, 1)[:, None])
+    v1 = values1[i1]
+    v2 = values2[i2]
+    fv = v1 * v2 if expr == "product" else v1 + v2
+    tm = jnp.arange(b_max, dtype=jnp.float32)[None, :]
+    mask = (tm < b_i[:, None]) & joinable[:, None]
+    fm = jnp.where(mask, fv, 0.0)
+    return (jnp.sum(mask, axis=1, dtype=jnp.float32),
+            jnp.sum(fm, axis=1),
+            jnp.sum(fm * fm, axis=1))

@@ -1,0 +1,305 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x applicable input shape x mesh) cell:
+  * build full-scale parameter / optimizer / cache ShapeDtypeStructs via
+    jax.eval_shape (no allocation),
+  * jit the cell's step (train_step / prefill forward / serve decode_step)
+    with in/out shardings derived from the logical-axis rules,
+  * .lower(...).compile() against the production mesh,
+  * record memory_analysis() + cost_analysis() + the roofline terms.
+
+Meshes: single-pod (16, 16) ('data', 'model') and multi-pod (2, 16, 16)
+('pod', 'data', 'model').  The XLA_FLAGS line above MUST run before any
+other import so the CPU platform exposes 512 placeholder devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                  # everything
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+      --shape train_4k --multi-pod --out experiments/dryrun
+"""
+
+import argparse
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, applicable
+from repro.launch import roofline as RL
+from repro.launch.mesh import data_axes, make_production_mesh
+from repro.models import Model
+from repro.models.config import ArchConfig
+from repro.models.layers import COMPUTE_DTYPE
+from repro.models.model import CLIP_DIM
+from repro.runtime.train import TrainState, make_train_step
+from repro.sharding.axes import cache_axes, param_axes
+from repro.sharding.specs import (DEFAULT_RULES, logical_rules, param_specs,
+                                  spec_for)
+
+
+def batch_specs(cfg: ArchConfig, kind: str, seq: int, batch: int) -> dict:
+    """ShapeDtypeStructs for every model input of this cell (deliverable:
+    input_specs())."""
+    toks = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    specs = {"tokens": toks}
+    if kind == "train":
+        specs["targets"] = toks
+    if cfg.num_img_tokens and kind != "decode":
+        specs["img_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.num_img_tokens, CLIP_DIM), jnp.float32)
+    if cfg.is_encdec and kind != "decode":
+        e = cfg.encoder
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (batch, e.n_frames, e.d_input), jnp.float32)
+    return specs
+
+
+def _sharded(shapes_tree, axes_tree, mesh, rules=None):
+    shardings = param_specs(axes_tree, shapes_tree, mesh, rules)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes_tree, shardings), shardings
+
+
+def _batch_sharded(specs: dict, mesh) -> dict:
+    out = {}
+    for k, s in specs.items():
+        names = ("batch",) + (None,) * (len(s.shape) - 1)
+        sh = NamedSharding(mesh, spec_for(names, s.shape, mesh,
+                                          DEFAULT_RULES))
+        out[k] = jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh)
+    return out
+
+
+ZERO1_RULES = {"embed": "data"}  # m/v d_model dims shard over DP (ZeRO-1)
+ZERO1_ENABLED = [False]          # set by --zero1 (module-level, not a cfg)
+
+
+def _train_artifacts(model, mesh, zero1: bool = False):
+    """Full-scale TrainState shapes + matching logical-axes tree.
+
+    Optimizer slots (m, v) reuse the parameter axes verbatim — sharded
+    optimizer state for free (DESIGN.md §6).  ``zero1`` additionally maps
+    the (otherwise replicated) 'embed' logical axis of the m/v slots onto
+    the 'data' mesh axis — ZeRO-1: every weight dim already sharded over
+    'model' keeps that, and the d_model dim shards 16-ways over DP, cutting
+    optimizer bytes ~16x per device at the cost of gather/scatter around
+    the update (which XLA schedules; measured in §Perf E)."""
+    from repro.optim.adamw import AdamWState
+    from repro.runtime.train import train_state_init
+
+    state_shapes = jax.eval_shape(
+        functools.partial(train_state_init, model), jax.random.key(0))
+    p_axes = param_axes(state_shapes.params, model.cfg)
+    st_axes = TrainState(p_axes, AdamWState((), p_axes, p_axes), None)
+    return state_shapes, st_axes
+
+
+def build_cell(arch: str, shape_name: str, mesh):
+    """(jitted fn, example args as sharded ShapeDtypeStructs)."""
+    cfg = ARCHS[arch]
+    cell = SHAPES[shape_name]
+    model = Model(cfg)
+
+    if cell.kind == "train":
+        state_shapes, st_axes = _train_artifacts(model, mesh)
+        state_sds, state_sh = _sharded(state_shapes, st_axes, mesh)
+        if ZERO1_ENABLED[0]:
+            _, opt_sh = _sharded(
+                state_shapes.opt, st_axes.opt, mesh, rules=ZERO1_RULES)
+            state_sh = state_sh._replace(opt=opt_sh)
+            state_sds = state_sds._replace(opt=jax.tree.map(
+                lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                                   sharding=sh),
+                state_shapes.opt, opt_sh))
+        batch_sds = _batch_sharded(
+            batch_specs(cfg, "train", cell.seq, cell.batch), mesh)
+        step = make_train_step(model)
+        fn = jax.jit(step,
+                     in_shardings=(state_sh,
+                                   {k: v.sharding for k, v in
+                                    batch_sds.items()}),
+                     out_shardings=(state_sh, None),
+                     donate_argnums=(0,))
+        return fn, (state_sds, batch_sds)
+
+    params_shapes = jax.eval_shape(model.init, jax.random.key(0))
+    p_axes = param_axes(params_shapes, cfg)
+    params_sds, params_sh = _sharded(params_shapes, p_axes, mesh)
+
+    if cell.kind == "prefill":
+        batch_sds = _batch_sharded(
+            batch_specs(cfg, "prefill", cell.seq, cell.batch), mesh)
+        # logits stay vocab-sharded on the way out: an unconstrained output
+        # made XLA all-gather the [B, 32k, V] tensor (40 GB for qwen2-0.5b)
+        # - found in the prefill_32k hillclimb (EXPERIMENTS.md §Perf)
+        logits_sh = NamedSharding(mesh, spec_for(
+            ("batch", None, "vocab"),
+            (cell.batch, cell.seq, cfg.vocab), mesh, DEFAULT_RULES))
+        fn = jax.jit(lambda p, b: model.forward(p, b)[0],
+                     in_shardings=(params_sh,
+                                   {k: v.sharding for k, v in
+                                    batch_sds.items()}),
+                     out_shardings=logits_sh)
+        return fn, (params_sds, batch_sds)
+
+    # decode
+    cache_shapes = model.cache_shape(cell.batch, cell.seq)
+    c_axes = cache_axes(cache_shapes)
+    cache_sds, cache_sh = _sharded(cache_shapes, c_axes, mesh)
+    tok_sh = NamedSharding(mesh, spec_for(("batch",), (cell.batch,), mesh,
+                                          DEFAULT_RULES))
+    tok_sds = jax.ShapeDtypeStruct((cell.batch,), jnp.int32,
+                                   sharding=tok_sh)
+    fn = jax.jit(model.decode_step,
+                 in_shardings=(params_sh, tok_sh, cache_sh),
+                 out_shardings=(None, cache_sh),
+                 donate_argnums=(2,))
+    return fn, (params_sds, tok_sds, cache_sds)
+
+
+def run_cell(arch: str, shape_name: str, mesh, *, verbose=True,
+             rules=None, cfg_overrides=None) -> dict:
+    import dataclasses
+    cfg = ARCHS[arch]
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+        ARCHS[arch] = cfg  # build_cell reads the registry
+    cell = SHAPES[shape_name]
+    chips = int(np.prod(list(mesh.shape.values())))
+    multi_pod = "pod" in mesh.shape
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": dict(mesh.shape), "chips": chips}
+    if rules:
+        rec["rules_override"] = dict(rules)
+    ok, why = applicable(cfg, shape_name)
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        return rec
+    t0 = time.time()
+    merged_rules = {**dict(cfg.rules or ()), **(rules or {})} or None
+    try:
+        with logical_rules(mesh, merged_rules):
+            fn, args = build_cell(arch, shape_name, mesh)
+            lowered = fn.lower(*args)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        rec["lower_compile_s"] = round(time.time() - t0, 1)
+        rec["memory"] = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+        # roofline
+        model = Model(cfg)
+        params_shapes = jax.eval_shape(model.init, jax.random.key(0))
+        n_total, n_active = RL.count_params(params_shapes, cfg)
+        mf = RL.model_flops_for(cfg, n_total, n_active, cell.kind,
+                                cell.batch, cell.seq)
+        hlo = compiled.as_text()
+        roof = RL.analyze(compiled, hlo, chips=chips, model_flops=mf,
+                          default_group=chips)
+        if cfg.ff_kind == "moe" and cfg.moe_impl == "ep":
+            # cost_analysis can't see inside shard_map bodies: add the
+            # expert-layer flops/bytes analytically (roofline.py)
+            tp = mesh.shape.get("model", 1)
+            df, dh = RL.ep_moe_correction(cfg, cell.kind, cell.batch,
+                                          cell.seq, chips, tp)
+            rec["ep_correction"] = {"flops_per_device": df,
+                                    "hbm_bytes_per_device": dh}
+            roof = roof._replace(
+                flops=roof.flops + df, hbm_bytes=roof.hbm_bytes + dh,
+                compute_s=(roof.flops + df) / RL.PEAK_FLOPS,
+                memory_s=(roof.hbm_bytes + dh) / RL.HBM_BW,
+                useful_fraction=mf / max((roof.flops + df) * chips, 1.0))
+        rec["roofline"] = {
+            "compute_s": roof.compute_s, "memory_s": roof.memory_s,
+            "collective_s": roof.collective_s, "dominant": roof.dominant,
+            "flops_per_device": roof.flops,
+            "hbm_bytes_per_device": roof.hbm_bytes,
+            "coll_bytes_per_device": roof.coll_bytes,
+            "collective_ops": roof.collectives,
+            "model_flops": mf, "useful_fraction": roof.useful_fraction,
+            "n_params": n_total, "n_active": n_active,
+        }
+        rec["status"] = "ok"
+        if verbose:
+            print(f"  OK   {arch:24s} {shape_name:12s} "
+                  f"{'multi' if multi_pod else 'single'}-pod  "
+                  f"compile={rec['lower_compile_s']}s "
+                  f"dominant={roof.dominant} "
+                  f"terms=({roof.compute_s:.3e},{roof.memory_s:.3e},"
+                  f"{roof.collective_s:.3e})s")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec["status"] = "failed"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"  FAIL {arch:24s} {shape_name:12s}: {rec['error'][:120]}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default all)")
+    ap.add_argument("--shape", default=None, help="one shape (default all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--rule", action="append", default=[],
+                    help="logical-axis rule override, e.g. seq=model")
+    ap.add_argument("--set", action="append", default=[], dest="sets",
+                    help="ArchConfig override, e.g. moe_impl=ep")
+    ap.add_argument("--zero1", action="store_true",
+                    help="shard optimizer slots over the data axis")
+    args = ap.parse_args()
+    def _coerce(v):
+        return int(v) if v.isdigit() else v
+    cfg_overrides = {k: _coerce(v) for k, v in
+                     (kv.split("=", 1) for kv in args.sets)} or None
+    ZERO1_ENABLED[0] = args.zero1
+    overrides = dict(r.split("=", 1) for r in args.rule) or None
+    if overrides:
+        overrides = {k: (None if v == "none" else v)
+                     for k, v in overrides.items()}
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [True, False] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    records = []
+    for mp in meshes:
+        mesh = make_production_mesh(multi_pod=mp)
+        tag = "multipod" if mp else "singlepod"
+        print(f"== mesh {dict(mesh.shape)} ==")
+        for arch in archs:
+            for shape in shapes:
+                rec = run_cell(arch, shape, mesh, rules=overrides,
+                               cfg_overrides=cfg_overrides)
+                records.append(rec)
+                fn = os.path.join(args.out,
+                                  f"{arch}__{shape}__{tag}.json")
+                with open(fn, "w") as fh:
+                    json.dump(rec, fh, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in records)
+    n_skip = sum(r["status"] == "skipped" for r in records)
+    n_fail = sum(r["status"] == "failed" for r in records)
+    print(f"\n== dry-run: {n_ok} ok, {n_skip} skipped (documented), "
+          f"{n_fail} failed ==")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

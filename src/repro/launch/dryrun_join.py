@@ -1,0 +1,117 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""Dry-run + roofline of the PAPER'S OWN OPERATOR at production scale.
+
+Lowers the distributed ApproxJoin pipeline (filter -> shuffle -> sample ->
+estimate) over the full 256/512-chip mesh with ShapeDtypeStruct relations
+(no allocation), and reports the same three roofline terms as the LM cells
+plus the collective census — the compiled-artifact validation of the
+paper's Eq. 24 communication claims at cluster scale.
+
+  PYTHONPATH=src python -m repro.launch.dryrun_join [--multi-pod]
+      [--log2-rows 26] [--mode exact|sample] [--no-filter]
+"""
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import bloom
+from repro.core.distributed import make_distributed_join
+from repro.core.relation import Relation
+from repro.launch import roofline as RL
+from repro.launch.mesh import make_production_mesh
+
+
+def run_join_cell(mesh, *, log2_rows: int, mode: str, filter_stage: bool,
+                  sample_fraction: float = 0.1, fp_rate: float = 0.01,
+                  overlap_hint: float = 1.0, verbose: bool = True) -> dict:
+    """overlap_hint < 1 enables filter-informed capacity planning (§Perf
+    paper-side iteration): the driver sizes the shuffle buckets from the
+    Bloom-estimated live fraction (2x slack) instead of the full input —
+    on a static-shape dataflow this is HOW the filter's shuffle saving
+    reaches the wire; overflow feeds the recompile-bigger elastic loop."""
+    axes = tuple(mesh.shape)                   # the join uses every axis
+    chips = int(np.prod(list(mesh.shape.values())))
+    n_global = 1 << log2_rows
+    local = n_global // chips
+    bucket_cap = max(int(2 * local * overlap_hint) // chips, 16)
+    max_strata = min(chips * bucket_cap, 1 << 16)
+    num_blocks = bloom.num_blocks_for(local, fp_rate)  # per-shard filter
+
+    run = make_distributed_join(
+        mesh, n_rels=2, join_axes=axes, mode=mode,
+        filter_stage=filter_stage, sample_fraction=sample_fraction,
+        bucket_cap=bucket_cap, max_strata=max_strata, b_max=512,
+        num_blocks=num_blocks)
+
+    sh = NamedSharding(mesh, P(axes))
+    rel = Relation(
+        jax.ShapeDtypeStruct((n_global,), jnp.uint32, sharding=sh),
+        jax.ShapeDtypeStruct((n_global,), jnp.float32, sharding=sh),
+        jax.ShapeDtypeStruct((n_global,), jnp.bool_, sharding=sh))
+    lowered = run.lower([rel, rel], 0.0)
+    compiled = lowered.compile()
+    hlo = compiled.as_text()
+    roof = RL.analyze(compiled, hlo, chips=chips, model_flops=0.0,
+                      default_group=chips)
+    mem = compiled.memory_analysis()
+    rec = {
+        "operator": f"approxjoin[{mode}"
+                    f"{'' if filter_stage else ',nofilter'}]",
+        "mesh": dict(mesh.shape), "chips": chips,
+        "rows_per_relation": n_global,
+        "bloom_blocks_per_shard": num_blocks,
+        "compute_s": roof.compute_s, "memory_s": roof.memory_s,
+        "collective_s": roof.collective_s, "dominant": roof.dominant,
+        "coll_bytes_per_device": roof.coll_bytes,
+        "collective_ops": roof.collectives,
+        "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+    }
+    if verbose:
+        print(f"  {rec['operator']:28s} chips={chips} "
+              f"terms=({roof.compute_s:.2e},{roof.memory_s:.2e},"
+              f"{roof.collective_s:.2e})s dominant={roof.dominant} "
+              f"colls={roof.collectives}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--log2-rows", type=int, default=26)
+    ap.add_argument("--out", default="experiments/dryrun_join.json")
+    args = ap.parse_args()
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    print(f"== join dry-run on mesh {dict(mesh.shape)} ==")
+    records = []
+    for mode, filt in (("exact", True), ("exact", False), ("sample", True)):
+        records.append(run_join_cell(mesh, log2_rows=args.log2_rows,
+                                     mode=mode, filter_stage=filt))
+    # §Perf paper-side iteration: filter-informed capacity planning —
+    # buckets sized from the Bloom-estimated 1% overlap instead of |R|
+    rec = run_join_cell(mesh, log2_rows=args.log2_rows, mode="sample",
+                        filter_stage=True, overlap_hint=0.01)
+    rec["operator"] = "approxjoin[sample,cap-planned]"
+    records.append(rec)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as fh:
+        json.dump(records, fh, indent=1)
+    # the paper's headline, at the compiled-artifact level: with static
+    # shapes the saving only reaches the wire once capacities are planned
+    # from the filter's overlap estimate
+    planned, unplanned = records[3], records[2]
+    ratio = unplanned["coll_bytes_per_device"] / max(
+        planned["coll_bytes_per_device"], 1)
+    print(f"collective bytes, naive-capacity / filter-planned-capacity = "
+          f"{ratio:.1f}x at 1% overlap")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state: jax locks the device count on first backend init, and only
+``dryrun.py`` (which sets XLA_FLAGS before any import) may ask for 512
+placeholder devices.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single-pod (16, 16) = 256 chips, or 2 pods x 256 = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(dp: int = 1, tp: int = 1):
+    """Small mesh over whatever devices exist (tests / reduced training)."""
+    n = len(jax.devices())
+    dp = min(dp, n)
+    tp = min(tp, max(n // dp, 1))
+    return jax.make_mesh((dp, tp), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """The DP axes present in this mesh (pod included when multi-pod)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)

@@ -1,0 +1,230 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+Three terms per (arch x shape x mesh), in seconds, per the assignment:
+
+    compute    = HLO_FLOPs   / (chips * 197 TFLOP/s bf16)
+    memory     = HLO_bytes   / (chips * 819 GB/s HBM)
+    collective = coll_bytes  / (chips * 50 GB/s/link ICI)
+
+``compiled.cost_analysis()`` on an SPMD-partitioned module reports the
+PER-DEVICE program, so the terms divide by per-chip rates directly.
+
+Collective bytes are not in cost_analysis: ``collective_bytes`` parses the
+(per-device) HLO text, resolves each collective's operand shapes through a
+name->shape table built from the def lines, and applies ring-cost
+multipliers: all-gather (k-1)/k x out, all-reduce 2 (k-1)/k x size,
+reduce-scatter (k-1)/k x in, all-to-all (k-1)/k x size, collective-permute
+1 x size (k = replica-group size parsed per op).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import NamedTuple
+
+import numpy as np
+
+PEAK_FLOPS = 197e12       # TPU v5e bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(.*)$")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string (handles tuples by summing)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    """Replica-group size from replica_groups={{0,1,..},{..}} or [N,M]<=..."""
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return max(len([x for x in m.group(1).split(",") if x.strip()]), 1)
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return max(int(m.group(2)), 1)
+    return default
+
+
+class CollectiveStats(NamedTuple):
+    bytes_by_kind: dict
+    count_by_kind: dict
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_kind.values()))
+
+
+def collective_bytes(hlo_text: str, default_group: int = 2
+                     ) -> CollectiveStats:
+    """Ring-model bytes moved per device, by collective kind."""
+    defs: dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            defs[m.group(1).lstrip("%")] = m.group(2)
+    by_bytes: dict = {k: 0.0 for k in _COLLECTIVES}
+    by_count: dict = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        rhs = m.group(2)
+        kind = next((k for k in _COLLECTIVES
+                     if re.search(rf"\b{k}(?:-start)?\(", rhs)), None)
+        if kind is None:
+            continue
+        k = _group_size(rhs, default_group)
+        out_b = _shape_bytes(rhs.split("(")[0])
+        # operand bytes via the def table
+        args = re.findall(r"%?([\w.\-]+)", rhs.split("(", 1)[1])
+        in_b = sum(_shape_bytes(defs[a].split("(")[0])
+                   for a in args if a in defs)
+        size = max(out_b, in_b)
+        if kind == "all-gather":
+            bytes_moved = out_b * (k - 1) / k
+        elif kind == "all-reduce":
+            bytes_moved = 2 * size * (k - 1) / k
+        elif kind == "reduce-scatter":
+            bytes_moved = in_b * (k - 1) / k if in_b else out_b * (k - 1)
+        elif kind == "all-to-all":
+            bytes_moved = size * (k - 1) / k
+        else:  # collective-permute
+            bytes_moved = size
+        by_bytes[kind] += bytes_moved
+        by_count[kind] += 1
+    return CollectiveStats(by_bytes, by_count)
+
+
+class Roofline(NamedTuple):
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float              # per-device HLO flops
+    hbm_bytes: float          # per-device HLO bytes accessed
+    coll_bytes: float         # per-device collective bytes (ring model)
+    collectives: dict         # count per kind
+    model_flops: float        # 6ND-style useful flops (global)
+    useful_fraction: float    # model_flops / (flops * chips)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline-optimistic step time: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+# XLA's CPU cost analysis reports a dot's "flops" as M*N*K (MACs); the
+# roofline convention (and the 197 TF peak) counts multiply+add = 2 flops.
+# Calibrated against 6ND on the dense archs (useful_fraction ~ 2.1 before,
+# ~1.05 after; see EXPERIMENTS.md §Roofline).
+MAC_TO_FLOP = 2.0
+
+
+def analyze(compiled, hlo_text: str, *, chips: int, model_flops: float,
+            default_group: int = 2) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # some backends return [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0)) * MAC_TO_FLOP
+    hbm = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text, default_group)
+    cb = coll.total_bytes
+    useful = model_flops / max(flops * chips, 1.0)
+    return Roofline(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=hbm / HBM_BW,
+        collective_s=cb / ICI_BW,
+        flops=flops, hbm_bytes=hbm, coll_bytes=cb,
+        collectives={k: v for k, v in coll.count_by_kind.items() if v},
+        model_flops=model_flops,
+        useful_fraction=useful,
+    )
+
+
+def ep_moe_correction(cfg, cell_kind: str, batch: int, seq: int,
+                      chips: int, tp: int) -> tuple:
+    """Analytic (flops, hbm bytes) PER DEVICE for shard_map EP MoE layers.
+
+    XLA's cost_analysis does not descend into shard_map call bodies, so the
+    expert matmuls vanish from 'flops'/'bytes accessed' when moe_impl='ep'.
+    We add them back from first principles:
+      * dispatched slots/device = E_pad * C / tp (block-EP) — identical to
+        E * C * (ffe/tp)/ffe (ffe-TP);
+      * 3 matmuls (wg, wu, wd) x 2 flops, x4 for train (fwd + 2x bwd +
+        remat re-fwd), x1 otherwise;
+      * HBM: expert weight bytes/device re-read per pass + bucket tensors
+        (xs, h, ys at bf16) twice each (write + read).
+    """
+    m = cfg.moe
+    E, K, ffe, d = m.num_experts, m.top_k, m.d_ff_expert, cfg.d_model
+    E_pad = -(-E // tp) * tp
+    n_dp = max(chips // tp, 1)
+    n_tok_local = max(batch * seq // n_dp, 1) if cell_kind != "decode" \
+        else max(batch // n_dp, 1)
+    C = max(int(n_tok_local * K * m.capacity_factor) // E, K)
+    layers = cfg.n_layers
+    passes = 4.0 if cell_kind == "train" else 1.0
+    slot_flops = 3 * 2 * (E_pad * C // tp) * d * ffe
+    flops = layers * passes * slot_flops
+    w_bytes = 3 * E * d * ffe * 4 / tp          # f32 master weights
+    bucket_bytes = 3 * (E_pad * C // tp) * max(d, ffe) * 2 * 2
+    hbm = layers * passes * (w_bytes + bucket_bytes)
+    return float(flops), float(hbm)
+
+
+def model_flops_for(cfg, n_params: int, n_active: int, cell_kind: str,
+                    batch: int, seq: int) -> float:
+    """6ND (train) / 2ND (prefill) / 2N per token (decode), active params."""
+    if cell_kind == "train":
+        return 6.0 * n_active * batch * seq
+    if cell_kind == "prefill":
+        return 2.0 * n_active * batch * seq
+    return 2.0 * n_active * batch      # decode: one token per sequence
+
+
+def count_params(shapes_tree, cfg) -> tuple:
+    """(total, active) param counts from a ShapeDtypeStruct tree.
+
+    Active = total with expert stacks scaled by (top_k + shared)/E (MoE) —
+    the paper-standard N_active for 6ND.
+    """
+    import jax
+
+    total = active = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes_tree)[0]:
+        names = [str(getattr(p, "key", "")) for p in path]
+        n = int(np.prod(leaf.shape))
+        total += n
+        if cfg.moe and any(x.startswith("ff_") for x in names) \
+                and "shared" not in names and leaf.ndim >= 3:
+            frac = cfg.moe.top_k / cfg.moe.num_experts
+            active += int(n * frac)
+        else:
+            active += n
+    return total, active

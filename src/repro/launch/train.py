@@ -1,0 +1,124 @@
+"""Training driver: config -> mesh -> data pipeline -> guarded steps ->
+checkpoints, with elastic restore at start.
+
+Runs the full production codepath at whatever scale the host offers: the
+same train_step that lowers on the 512-chip dry-run runs here on 1-8 CPU
+devices with a reduced config (--reduced), a few hundred steps in minutes.
+``examples/train_lm.py`` drives this for the ~100M-param end-to-end run.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
+      --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt --ckpt-every 50
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.data.pipeline import lm_batch
+from repro.launch.mesh import make_host_mesh
+from repro.models import Model
+from repro.models.model import CLIP_DIM
+from repro.runtime.checkpoint import save_checkpoint
+from repro.runtime.fault import (StragglerMonitor, elastic_restore,
+                                 guarded_step)
+from repro.runtime.train import make_train_step, train_state_init
+from repro.sharding.specs import logical_rules
+
+
+def make_batch_fn(cfg, batch: int, seq: int, seed: int = 0):
+    """Deterministic per-(step, shard) batch generator (fault-tolerant)."""
+    import jax.numpy as jnp
+
+    def fn(step: int) -> dict:
+        b = lm_batch(step, 0, batch=batch, seq=seq, vocab=cfg.vocab,
+                     seed=seed, structured=True)
+        if cfg.num_img_tokens:
+            b["img_embeds"] = jnp.zeros((batch, cfg.num_img_tokens,
+                                         CLIP_DIM), jnp.float32)
+        if cfg.is_encdec:
+            e = cfg.encoder
+            b["frames"] = jnp.zeros((batch, e.n_frames, e.d_input),
+                                    jnp.float32)
+        return b
+
+    return fn
+
+
+def run(arch: str, *, steps: int = 100, batch: int = 8, seq: int = 128,
+        reduced: bool = True, lr: float = 3e-4, microbatches: int = 1,
+        ckpt_dir: str | None = None, ckpt_every: int = 50,
+        log_every: int = 10, dp: int = 1, tp: int = 1,
+        seed: int = 0) -> dict:
+    cfg = ARCHS[arch]
+    if reduced:
+        cfg = cfg.reduced(vocab=512, d_model=128, d_ff=256,
+                          n_layers=len(cfg.mixer_pattern) * 2)
+    model = Model(cfg)
+    mesh = make_host_mesh(dp, tp)
+    step_fn = make_train_step(model, lr=lr, total_steps=steps,
+                              warmup=max(steps // 20, 5),
+                              microbatches=microbatches)
+    batch_fn = make_batch_fn(cfg, batch, seq, seed)
+    monitor = StragglerMonitor()
+
+    with logical_rules(mesh):
+        jitted = jax.jit(step_fn, donate_argnums=(0,))
+        state = train_state_init(model, jax.random.key(seed))
+        start = 0
+        if ckpt_dir:
+            state, start, _ = elastic_restore(ckpt_dir, state)
+            if start:
+                print(f"[train] resumed from step {start}")
+        metrics = {}
+        losses = []
+        for step in range(start, steps):
+            t0 = time.time()
+            state, metrics = guarded_step(jitted, state, batch_fn(step))
+            jax.block_until_ready(metrics["loss"])
+            dt = time.time() - t0
+            monitor.record("host0", dt)
+            losses.append(float(metrics["loss"]))
+            if step % log_every == 0 or step == steps - 1:
+                print(f"[train] step {step:5d} loss={losses[-1]:.4f} "
+                      f"lr={float(metrics['lr']):.2e} "
+                      f"gnorm={float(metrics['grad_norm']):.3f} "
+                      f"dt={dt*1e3:.0f}ms")
+            if ckpt_dir and (step + 1) % ckpt_every == 0:
+                save_checkpoint(ckpt_dir, step + 1, state, sync=False)
+        if ckpt_dir:
+            save_checkpoint(ckpt_dir, steps, state, sync=True)
+    return {"final_loss": losses[-1], "first_loss": losses[0],
+            "losses": losses, "metrics": {k: float(v)
+                                          for k, v in metrics.items()}}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(ARCHS))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--dp", type=int, default=1)
+    ap.add_argument("--tp", type=int, default=1)
+    args = ap.parse_args()
+    out = run(args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
+              reduced=args.reduced, lr=args.lr,
+              microbatches=args.microbatches, ckpt_dir=args.ckpt_dir,
+              ckpt_every=args.ckpt_every, dp=args.dp, tp=args.tp)
+    print(f"[train] done: loss {out['first_loss']:.4f} -> "
+          f"{out['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

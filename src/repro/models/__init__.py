@@ -1,0 +1,15 @@
+"""Model zoo: the 10 assigned architectures as one composable trunk.
+
+Every arch is a configuration of the same scanned-block decoder trunk
+(``trunk.py``) — mixer pattern (attention / local attention / Mamba / RG-LRU)
+x feed-forward type (dense SwiGLU/GeGLU/GELU or MoE) — except whisper, which
+composes the same layers into an encoder-decoder (``encdec.py``).
+``model.py`` exposes init / loss / decode plus the registry.
+"""
+
+from repro.models.config import ARCHS, ArchConfig, get_config
+from repro.models.model import Model
+
+import repro.configs  # noqa: E402,F401  (registers the 10 arch configs)
+
+__all__ = ["ARCHS", "ArchConfig", "get_config", "Model"]

@@ -1,0 +1,136 @@
+"""Whisper-small encoder-decoder (the [audio] arch).
+
+The conv frontend is a STUB per the assignment: ``input_specs`` supplies
+precomputed mel frames [B, n_frames, d_input]; a linear projection stands in
+for the two convs.  Positions are sinusoidal for both stacks (whisper uses
+learned decoder positions; deviation noted in DESIGN.md §5).  Norms are
+LayerNorm (with bias), pre-norm arrangement, GELU MLP — per the original.
+
+Encoder: bidirectional attention over frames, scanned blocks.
+Decoder: causal self-attention + cross-attention to encoder output, scanned;
+decode caches self-KV per layer, cross-KV precomputed once at prefill.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def _split_stack(key, n):
+    return jax.random.split(key, n)
+
+
+def init_enc_block(key, cfg) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {"pre_attn": L.layernorm_init(cfg.d_model),
+            "attn": L.init_attention(k1, cfg),
+            "pre_mlp": L.layernorm_init(cfg.d_model),
+            "mlp": L.init_mlp(k2, cfg)}
+
+
+def init_dec_block(key, cfg) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"pre_self": L.layernorm_init(cfg.d_model),
+            "self_attn": L.init_attention(k1, cfg),
+            "pre_cross": L.layernorm_init(cfg.d_model),
+            "cross_attn": L.init_attention(k2, cfg),
+            "pre_mlp": L.layernorm_init(cfg.d_model),
+            "mlp": L.init_mlp(k3, cfg)}
+
+
+def init_encdec(key, cfg) -> dict:
+    enc = cfg.encoder
+    ks = jax.random.split(key, 4)
+    return {
+        "frame_proj": L._dense_init(ks[0], (enc.d_input, cfg.d_model)),
+        "enc_blocks": jax.vmap(lambda k: init_enc_block(k, cfg))(
+            _split_stack(ks[1], enc.n_layers)),
+        "enc_norm": L.layernorm_init(cfg.d_model),
+        "dec_blocks": jax.vmap(lambda k: init_dec_block(k, cfg))(
+            _split_stack(ks[2], cfg.n_layers)),
+    }
+
+
+def encode(p, frames, cfg) -> jnp.ndarray:
+    """frames [B, F, d_input] -> encoder states [B, F, d]."""
+    B, F, _ = frames.shape
+    x = (frames.astype(L.COMPUTE_DTYPE) @
+         p["frame_proj"].astype(L.COMPUTE_DTYPE))
+    x = x + L.sinusoidal_embedding(
+        jnp.arange(F, dtype=jnp.int32), cfg.d_model).astype(x.dtype)
+
+    def step(x, bp):
+        h = L.layernorm(bp["pre_attn"], x, cfg.norm_eps)
+        x = x + L.attention_train(bp["attn"], h, cfg, kind="full")
+        h = L.layernorm(bp["pre_mlp"], x, cfg.norm_eps)
+        x = x + L.mlp(bp["mlp"], h, cfg)
+        return x, None
+
+    fn = jax.checkpoint(step) if cfg.remat == "block" else step
+    x, _ = jax.lax.scan(fn, x, p["enc_blocks"])
+    return L.layernorm(p["enc_norm"], x, cfg.norm_eps)
+
+
+def decode_train(p, x, enc_out, cfg, positions) -> jnp.ndarray:
+    """Teacher-forced decoder pass: x [B, T, d] token embeddings."""
+
+    def step(x, bp):
+        h = L.layernorm(bp["pre_self"], x, cfg.norm_eps)
+        x = x + L.attention_train(bp["self_attn"], h, cfg, kind="causal",
+                                  positions=positions)
+        h = L.layernorm(bp["pre_cross"], x, cfg.norm_eps)
+        kv = L.cross_kv(bp["cross_attn"], enc_out, cfg)
+        x = x + L.attention_train(bp["cross_attn"], h, cfg, kind="cross",
+                                  kv=kv)
+        h = L.layernorm(bp["pre_mlp"], x, cfg.norm_eps)
+        x = x + L.mlp(bp["mlp"], h, cfg)
+        return x, None
+
+    fn = jax.checkpoint(step) if cfg.remat == "block" else step
+    x, _ = jax.lax.scan(fn, x, p["dec_blocks"])
+    return x
+
+
+class EncDecCache(NamedTuple):
+    self_kv: L.KVCache       # leaves stacked [n_dec_layers, ...]
+    cross_k: jnp.ndarray     # [n_dec, B, F, Hk, hd]
+    cross_v: jnp.ndarray
+
+
+def init_encdec_cache(p, enc_out, cfg, batch: int, max_seq: int):
+    """Precompute cross-KV from encoder output; allocate self cache."""
+    def per_layer(bp):
+        return L.cross_kv(bp["cross_attn"], enc_out, cfg)
+
+    ck, cv = jax.vmap(per_layer)(p["dec_blocks"])
+    one = L.init_kv_cache(cfg, batch, max_seq, "causal")
+    self_kv = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), one)
+    return EncDecCache(self_kv, ck, cv)
+
+
+def decode_step(p, x, cfg, cache: EncDecCache) -> tuple:
+    """One-token decoder step: x [B, 1, d] -> (x, new cache)."""
+
+    def step(x, inp):
+        bp, skv, ck, cv = inp
+        h = L.layernorm(bp["pre_self"], x, cfg.norm_eps)
+        mx, nkv = L.attention_decode(bp["self_attn"], h, cfg, skv,
+                                     kind="causal")
+        x = x + mx
+        h = L.layernorm(bp["pre_cross"], x, cfg.norm_eps)
+        x = x + L.attention_train(bp["cross_attn"], h, cfg, kind="cross",
+                                  kv=(ck, cv))
+        h = L.layernorm(bp["pre_mlp"], x, cfg.norm_eps)
+        x = x + L.mlp(bp["mlp"], h, cfg)
+        return x, nkv
+
+    x, new_self = jax.lax.scan(
+        step, x, (p["dec_blocks"], cache.self_kv, cache.cross_k,
+                  cache.cross_v))
+    return x, EncDecCache(new_self, cache.cross_k, cache.cross_v)

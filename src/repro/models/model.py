@@ -1,0 +1,165 @@
+"""Top-level Model API: init / loss / prefill / decode for every arch.
+
+All functions are pure and eval_shape-able — the multi-pod dry-run builds
+parameter and cache ShapeDtypeStructs through ``jax.eval_shape(model.init)``
+and never allocates full-scale tensors.
+
+Loss is next-token cross-entropy in f32 with z-loss, computed on
+vocab-sharded logits (logical ('batch','seq','vocab')) so the 256 K-vocab
+archs never materialize replicated logits; MoE aux loss folds in when present
+(weights per the usual production recipes).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as ED
+from repro.models import layers as L
+from repro.models import trunk as TR
+from repro.models.config import ArchConfig
+from repro.sharding.specs import shard_hint
+
+Z_LOSS_WEIGHT = 1e-4
+MOE_AUX_WEIGHT = 1e-2
+CLIP_DIM = 1024  # phi-3-vision stub frontend: projected CLIP patch features
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # --- parameters ---------------------------------------------------------
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        p: dict = {"embed": jax.random.normal(
+            ks[0], (cfg.vocab, cfg.d_model), jnp.float32) * 0.02}
+        if cfg.is_encdec:
+            p["encdec"] = ED.init_encdec(ks[1], cfg)
+        else:
+            p["trunk"] = TR.init_trunk(ks[1], cfg)
+        p["final_norm"] = (L.layernorm_init(cfg.d_model)
+                           if cfg.family == "audio"
+                           else L.rmsnorm_init(cfg.d_model))
+        if not cfg.tie_embeddings:
+            p["head"] = L._dense_init(ks[2], (cfg.d_model, cfg.vocab))
+        if cfg.num_img_tokens:
+            p["img_proj"] = L._dense_init(ks[3], (CLIP_DIM, cfg.d_model))
+        return p
+
+    # --- shared pieces --------------------------------------------------------
+
+    def _embed(self, p, tokens):
+        cfg = self.cfg
+        x = p["embed"][tokens].astype(L.COMPUTE_DTYPE)
+        if cfg.scale_embed:
+            x = x * jnp.sqrt(jnp.asarray(cfg.d_model, L.COMPUTE_DTYPE))
+        return x
+
+    def _final_norm(self, p, x):
+        cfg = self.cfg
+        return (L.layernorm(p["final_norm"], x, cfg.norm_eps)
+                if cfg.family == "audio"
+                else L.rmsnorm(p["final_norm"], x, cfg.norm_eps))
+
+    def _logits(self, p, x):
+        cfg = self.cfg
+        head = (p["embed"].T if cfg.tie_embeddings else p["head"])
+        logits = x @ head.astype(L.COMPUTE_DTYPE)
+        logits = L.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+        return shard_hint(logits, ("batch", "seq", "vocab"))
+
+    # --- forward (train / prefill) -------------------------------------------
+
+    def forward(self, p, batch: dict) -> tuple:
+        """-> (logits over token positions [B, T, V], aux dict)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, T = tokens.shape
+        x = self._embed(p, tokens)
+        aux: dict = {}
+        if cfg.is_encdec:
+            enc_out = ED.encode(p["encdec"], batch["frames"], cfg)
+            pos = jnp.arange(T, dtype=jnp.int32)[None, :]
+            x = x + L.sinusoidal_embedding(pos[0], cfg.d_model
+                                           ).astype(x.dtype)[None]
+            x = ED.decode_train(p["encdec"], x, enc_out, cfg, pos)
+        else:
+            P_img = 0
+            if cfg.num_img_tokens:
+                img = batch["img_embeds"].astype(L.COMPUTE_DTYPE)
+                x = jnp.concatenate(
+                    [img @ p["img_proj"].astype(L.COMPUTE_DTYPE), x], axis=1)
+                P_img = cfg.num_img_tokens
+            pos = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+            pos = jnp.broadcast_to(pos, (B, x.shape[1]))
+            x, aux = TR.trunk_train(p["trunk"], x, cfg, pos)
+            if P_img:
+                x = x[:, P_img:]
+        x = self._final_norm(p, x)
+        return self._logits(p, x), aux
+
+    def loss(self, p, batch: dict) -> tuple:
+        """-> (scalar loss, metrics dict)."""
+        logits, aux = self.forward(p, batch)
+        targets = batch["targets"]
+        logz = jax.nn.logsumexp(logits, axis=-1)              # [B, T] f32
+        gold = jnp.take_along_axis(logits, targets[..., None],
+                                   axis=-1)[..., 0]
+        nll = jnp.mean(logz - gold)
+        zloss = Z_LOSS_WEIGHT * jnp.mean(logz ** 2)
+        total = nll + zloss
+        metrics = {"nll": nll, "z_loss": zloss}
+        if "moe_aux_loss" in aux:
+            total = total + MOE_AUX_WEIGHT * aux["moe_aux_loss"]
+            metrics["moe_aux_loss"] = aux["moe_aux_loss"]
+            metrics["moe_overflow"] = aux["moe_overflow"]
+        metrics["loss"] = total
+        return total, metrics
+
+    # --- serving --------------------------------------------------------------
+
+    def init_cache(self, p: Optional[dict], batch: int, max_seq: int,
+                   frames: Optional[jnp.ndarray] = None):
+        """Decode cache.  Whisper needs (params, frames) for cross-KV."""
+        cfg = self.cfg
+        if cfg.is_encdec:
+            assert p is not None and frames is not None
+            enc_out = ED.encode(p["encdec"], frames, cfg)
+            return ED.init_encdec_cache(p["encdec"], enc_out, cfg, batch,
+                                        max_seq)
+        return TR.init_trunk_cache(cfg, batch, max_seq + cfg.num_img_tokens)
+
+    def cache_shape(self, batch: int, max_seq: int):
+        """ShapeDtypeStructs of the cache (dry-run input specs)."""
+        cfg = self.cfg
+        if cfg.is_encdec:
+            enc = cfg.encoder
+            return jax.eval_shape(
+                lambda key: self.init_cache(
+                    self.init(key), batch, max_seq,
+                    jnp.zeros((batch, enc.n_frames, enc.d_input),
+                              L.COMPUTE_DTYPE)),
+                jax.random.key(0))
+        return jax.eval_shape(
+            lambda: self.init_cache(None, batch, max_seq))
+
+    def decode_step(self, p, tokens, cache) -> tuple:
+        """tokens int32 [B] -> (logits f32 [B, V], new cache)."""
+        cfg = self.cfg
+        x = self._embed(p, tokens[:, None])                   # [B, 1, d]
+        if cfg.is_encdec:
+            pos = cache.self_kv.pos[0]                        # [B]
+            x = x + L.sinusoidal_embedding(pos[:, None],
+                                           cfg.d_model).astype(x.dtype)
+            x, cache = ED.decode_step(p["encdec"], x, cfg, cache)
+        else:
+            x, cache = TR.trunk_decode(p["trunk"], x, cfg, cache)
+        x = self._final_norm(p, x)
+        logits = self._logits(p, x)[:, 0]
+        return logits, cache

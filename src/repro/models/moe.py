@@ -1,0 +1,324 @@
+"""Mixture-of-Experts feed-forward (moonshot 64e/top-6+2sh, qwen2-moe
+60e/top-4+4sh).
+
+Sort-based capacity dispatch — the SAME static-shape ranking trick as the
+join shuffle (core.distributed.bucketize): flatten (token, choice) pairs,
+sort by expert, rank within expert runs, drop beyond the static capacity
+C = ceil(T * top_k / E * capacity_factor), gather tokens into [E, C, d]
+buckets, run the expert FFNs as one batched matmul, scatter-add back with the
+router weights.  Capacity overflow is counted and returned (aux) — same
+feedback surface as the join's bucket overflow.
+
+Expert weights are sharded over the 'expert' logical axis (EP over the model
+mesh axis); the bucket tensor carries a logical ('expert', 'capacity',
+'embed') hint so GSPMD keeps dispatch local to the expert shard.  The
+beyond-paper §Perf experiment swaps this GSPMD formulation for an explicit
+shard_map all_to_all (the paper's "don't shuffle what won't join" insight on
+token routing).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import COMPUTE_DTYPE, _dense_init
+from repro.sharding.specs import shard_hint
+
+
+def init_moe(key, cfg) -> dict:
+    m = cfg.moe
+    d, ffe, E = cfg.d_model, m.d_ff_expert, m.num_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense_init(ks[0], (d, E)),
+        "wg": _dense_init(ks[1], (E, d, ffe), in_axis=1),
+        "wu": _dense_init(ks[2], (E, d, ffe), in_axis=1),
+        "wd": _dense_init(ks[3], (E, ffe, d), in_axis=1),
+    }
+    if m.num_shared:
+        ff_sh = m.num_shared * ffe
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared"] = {"wg": _dense_init(k1, (d, ff_sh)),
+                       "wu": _dense_init(k2, (d, ff_sh)),
+                       "wd": _dense_init(k3, (ff_sh, d))}
+    return p
+
+
+def moe_ffn(p, x, cfg):
+    """x [B, T, d] -> (y [B, T, d], aux dict with load-balance loss)."""
+    m = cfg.moe
+    B, T, d = x.shape
+    E, K = m.num_experts, m.top_k
+    N = B * T
+    xf = x.reshape(N, d)
+    c = COMPUTE_DTYPE
+
+    logits = (xf @ p["router"].astype(c)).astype(jnp.float32)   # [N, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)                      # [N, K]
+    if m.router_softmax_after_topk:
+        top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # load-balance aux loss (Switch-style): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)                                 # [E]
+    ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(
+        jnp.ones((N * K,), jnp.float32)) / (N * K)
+    aux_loss = E * jnp.sum(me * ce)
+
+    # --- sort-based dispatch (static shapes) ---
+    # decode-sized batches (N*K small) get loss-free capacity: a dropped
+    # token in a 1-token decode step is a wrong answer, not a regularizer.
+    if N * K <= 4096:
+        C = N * K
+    else:
+        C = max(int(N * K * m.capacity_factor) // E, 1)
+    e_flat = top_e.reshape(-1)                                   # [N*K]
+    w_flat = top_p.reshape(-1).astype(c)
+    t_flat = jnp.arange(N * K, dtype=jnp.int32) // K             # token ids
+    order = jnp.argsort(e_flat)                                  # stable
+    e_s, w_s, t_s = e_flat[order], w_flat[order], t_flat[order]
+    pos = jnp.arange(N * K, dtype=jnp.int32)
+    is_start = jnp.concatenate([jnp.ones((1,), bool), e_s[1:] != e_s[:-1]])
+    rank = pos - jax.lax.cummax(jnp.where(is_start, pos, 0))
+    ok = rank < C
+    slot = jnp.where(ok, e_s * C + rank, E * C)                  # drop -> E*C
+    overflow = jnp.sum(~ok)
+
+    tok_for_slot = jnp.full((E * C + 1,), N, jnp.int32).at[slot].set(
+        t_s, mode="drop")[:-1]
+    w_for_slot = jnp.zeros((E * C + 1,), c).at[slot].set(
+        w_s, mode="drop")[:-1]
+
+    xpad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)])    # row N = 0
+    xs = xpad[tok_for_slot].reshape(E, C, d)                     # [E, C, d]
+    xs = shard_hint(xs, ("expert", None, None))
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xs, p["wg"].astype(c))) \
+        * jnp.einsum("ecd,edf->ecf", xs, p["wu"].astype(c))
+    ys = jnp.einsum("ecf,efd->ecd", h, p["wd"].astype(c))        # [E, C, d]
+    ys = shard_hint(ys, ("expert", None, None))
+
+    ys_flat = ys.reshape(E * C, d) * w_for_slot[:, None]
+    y = jnp.zeros((N + 1, d), c).at[tok_for_slot].add(ys_flat)[:N]
+
+    if m.num_shared:
+        sp = p["shared"]
+        y = y + (jax.nn.silu(xf @ sp["wg"].astype(c)) *
+                 (xf @ sp["wu"].astype(c))) @ sp["wd"].astype(c)
+    return y.reshape(B, T, d), {"moe_aux_loss": aux_loss,
+                                "moe_overflow": overflow}
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper §Perf: explicit shard_map EP dispatch.
+#
+# Under GSPMD the bucket gather (xpad[tok_for_slot] against expert-sharded
+# buckets) makes XLA all-gather the full token activations per MoE layer —
+# measured at ~250 GB/device/step on qwen2-moe train_4k.  This variant is
+# the paper's insight on token routing: tokens never move; each model-rank
+# routes the (replicated) token shard to ITS OWN experts only and the sole
+# collective is one psum of the partial outputs — the same replicate-and-
+# mask pattern as the join's "don't shuffle what won't join".
+#
+# Experts are zero-padded to a multiple of the 'model' axis (qwen2-moe's 60
+# -> 64) with router logits forced to -inf on the padding, so indivisible
+# expert counts get EP instead of full replication.
+# ---------------------------------------------------------------------------
+
+def _pad_experts(w, E_pad: int):
+    E = w.shape[0]
+    if E == E_pad:
+        return w
+    pad = jnp.zeros((E_pad - E,) + w.shape[1:], w.dtype)
+    return jnp.concatenate([w, pad], axis=0)
+
+
+def moe_ffn_ep(p, x, cfg):
+    """shard_map expert-parallel MoE over the 'model' mesh axis.
+
+    Needs an active logical_rules binding with a 'model' axis; otherwise
+    falls back to the GSPMD formulation."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.specs import current_binding
+
+    bind = current_binding()
+    if bind is None or "model" not in bind[0].shape:
+        return moe_ffn(p, x, cfg)
+    mesh, _ = bind
+    tp = mesh.shape["model"]
+    m = cfg.moe
+    B, T, d = x.shape
+    E = m.num_experts
+    E_pad = -(-E // tp) * tp
+    E_l = E_pad // tp
+    K = m.top_k
+    ffe = m.d_ff_expert
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    n_dp = 1
+    for a in dp_axes:
+        n_dp *= mesh.shape[a]
+    N_l = max(B * T // n_dp, 1)
+    C = max(int(N_l * K * m.capacity_factor) // E, K)
+    c = COMPUTE_DTYPE
+
+    # Match the body to the weights' STORAGE layout so no weight bytes move
+    # at dispatch time (iteration 2 of the qwen2-moe hillclimb: re-padding
+    # + resharding stored ffe-sharded weights every step cost 9 all-to-alls):
+    #   E % tp == 0 -> block-EP body (each rank owns E/tp whole experts)
+    #   else        -> ffe-TP body (each rank owns every expert's ffe/tp
+    #                  slice and computes ALL dispatched slots on it)
+    # Identical FLOPs and the identical single psum either way.
+    if E % tp != 0:
+        assert ffe % tp == 0, f"{cfg.name}: neither E={E} nor ffe={ffe} " \
+            f"divides tp={tp}"
+        return _moe_ffn_ffe_tp(p, x, cfg, mesh, dp_axes, C)
+
+    wg = _pad_experts(p["wg"], E_pad)
+    wu = _pad_experts(p["wu"], E_pad)
+    wd = _pad_experts(p["wd"], E_pad)
+
+    def body(xb, router, wg_l, wu_l, wd_l):
+        Bl, Tl, _ = xb.shape
+        Nl = Bl * Tl
+        xf = xb.reshape(Nl, d)
+        me = jax.lax.axis_index("model")
+        logits = (xf @ router.astype(c)).astype(jnp.float32)    # [Nl, E]
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_e = jax.lax.top_k(probs, K)
+        if m.router_softmax_after_topk:
+            top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+        me_base = me * E_l
+        e_flat = top_e.reshape(-1)
+        w_flat = top_p.reshape(-1).astype(c)
+        t_flat = jnp.arange(Nl * K, dtype=jnp.int32) // K
+        mine = (e_flat >= me_base) & (e_flat < me_base + E_l)
+        e_local = jnp.where(mine, e_flat - me_base, E_l)        # drop -> E_l
+        order = jnp.argsort(e_local)
+        e_s, w_s, t_s = e_local[order], w_flat[order], t_flat[order]
+        pos = jnp.arange(Nl * K, dtype=jnp.int32)
+        is_start = jnp.concatenate([jnp.ones((1,), bool),
+                                    e_s[1:] != e_s[:-1]])
+        rank = pos - jax.lax.cummax(jnp.where(is_start, pos, 0))
+        ok = (e_s < E_l) & (rank < C)
+        slot = jnp.where(ok, e_s * C + rank, E_l * C)
+        overflow = jax.lax.psum(
+            jnp.sum((e_s < E_l) & (rank >= C)), "model")
+        tok_for_slot = jnp.full((E_l * C + 1,), Nl, jnp.int32).at[slot].set(
+            t_s, mode="drop")[:-1]
+        w_for_slot = jnp.zeros((E_l * C + 1,), c).at[slot].set(
+            w_s, mode="drop")[:-1]
+        xpad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)])
+        xs = xpad[tok_for_slot].reshape(E_l, C, d)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xs, wg_l.astype(c))) \
+            * jnp.einsum("ecd,edf->ecf", xs, wu_l.astype(c))
+        ys = jnp.einsum("ecf,efd->ecd", h, wd_l.astype(c))
+        ys_flat = ys.reshape(E_l * C, d) * w_for_slot[:, None]
+        y = jnp.zeros((Nl + 1, d), c).at[tok_for_slot].add(ys_flat)[:Nl]
+        y = jax.lax.psum(y, "model")                            # the ONLY
+        # load-balance aux (identical on every model rank; pmean over DP
+        # to match the GSPMD global-batch statistics)
+        me_p = jnp.mean(probs, axis=0)
+        ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(
+            jnp.ones((Nl * K,), jnp.float32)) / (Nl * K)
+        aux = E * jnp.sum(me_p * ce)
+        if dp_axes:
+            aux = jax.lax.pmean(aux, dp_axes)
+            overflow = jax.lax.psum(overflow, dp_axes)
+        return (y.reshape(Bl, Tl, d), aux[None],
+                overflow[None].astype(jnp.float32))
+
+    # NB: the router stays unpadded — top_k only ever selects real experts,
+    # so zero-padded expert slots simply never receive tokens.
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(dp_axes or None, None, None), P(), P("model"),
+                  P("model"), P("model")),
+        out_specs=(P(dp_axes or None, None, None), P(), P()),
+        check_rep=False)
+    y, aux, ovf = fn(x, p["router"], wg, wu, wd)
+    y = y.astype(c)
+    if m.num_shared:
+        sp = p["shared"]
+        xf = x.reshape(B * T, d)
+        y = y + ((jax.nn.silu(xf @ sp["wg"].astype(c)) *
+                  (xf @ sp["wu"].astype(c))) @ sp["wd"].astype(c)
+                 ).reshape(B, T, d)
+    return y, {"moe_aux_loss": aux[0], "moe_overflow": ovf[0]}
+
+
+def _moe_ffn_ffe_tp(p, x, cfg, mesh, dp_axes, C):
+    """ffe-TP dispatch body (expert count indivisible by the model axis).
+
+    Every model-rank routes the full (replicated) token shard, buckets for
+    ALL experts, and runs the expert matmuls over its ffe/tp weight slice —
+    partial outputs psum over 'model'.  Weight layout == storage layout, so
+    the only collective is the psum."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    m = cfg.moe
+    B, T, d = x.shape
+    E, K = m.num_experts, m.top_k
+    c = COMPUTE_DTYPE
+
+    def body(xb, router, wg_l, wu_l, wd_l):
+        Bl, Tl, _ = xb.shape
+        Nl = Bl * Tl
+        xf = xb.reshape(Nl, d)
+        logits = (xf @ router.astype(c)).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_e = jax.lax.top_k(probs, K)
+        if m.router_softmax_after_topk:
+            top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+        e_flat = top_e.reshape(-1)
+        w_flat = top_p.reshape(-1).astype(c)
+        t_flat = jnp.arange(Nl * K, dtype=jnp.int32) // K
+        order = jnp.argsort(e_flat)
+        e_s, w_s, t_s = e_flat[order], w_flat[order], t_flat[order]
+        pos = jnp.arange(Nl * K, dtype=jnp.int32)
+        is_start = jnp.concatenate([jnp.ones((1,), bool),
+                                    e_s[1:] != e_s[:-1]])
+        rank = pos - jax.lax.cummax(jnp.where(is_start, pos, 0))
+        ok = rank < C
+        slot = jnp.where(ok, e_s * C + rank, E * C)
+        overflow = jnp.sum(~ok).astype(jnp.float32)
+        tok_for_slot = jnp.full((E * C + 1,), Nl, jnp.int32).at[slot].set(
+            t_s, mode="drop")[:-1]
+        w_for_slot = jnp.zeros((E * C + 1,), c).at[slot].set(
+            w_s, mode="drop")[:-1]
+        xpad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)])
+        xs = xpad[tok_for_slot].reshape(E, C, d)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xs, wg_l.astype(c))) \
+            * jnp.einsum("ecd,edf->ecf", xs, wu_l.astype(c))
+        ys = jnp.einsum("ecf,efd->ecd", h, wd_l.astype(c))
+        ys_flat = ys.reshape(E * C, d) * w_for_slot[:, None]
+        y = jnp.zeros((Nl + 1, d), c).at[tok_for_slot].add(ys_flat)[:Nl]
+        y = jax.lax.psum(y, "model")      # partial over the sharded ffe
+        me_p = jnp.mean(probs, axis=0)
+        ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(
+            jnp.ones((Nl * K,), jnp.float32)) / (Nl * K)
+        aux = E * jnp.sum(me_p * ce)
+        if dp_axes:  # match the GSPMD global-batch statistics
+            aux = jax.lax.pmean(aux, dp_axes)
+            overflow = jax.lax.psum(overflow, dp_axes)
+        return (y.reshape(Bl, Tl, d), aux[None], overflow[None])
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(dp_axes or None, None, None), P(),
+                  P(None, None, "model"), P(None, None, "model"),
+                  P(None, "model", None)),
+        out_specs=(P(dp_axes or None, None, None), P(), P()),
+        check_rep=False)
+    y, aux, ovf = fn(x, p["router"], p["wg"], p["wu"], p["wd"])
+    y = y.astype(c)
+    if m.num_shared:
+        sp = p["shared"]
+        xf = x.reshape(B * T, d)
+        y = y + ((jax.nn.silu(xf @ sp["wg"].astype(c)) *
+                  (xf @ sp["wu"].astype(c))) @ sp["wd"].astype(c)
+                 ).reshape(B, T, d)
+    return y, {"moe_aux_loss": aux[0], "moe_overflow": ovf[0]}

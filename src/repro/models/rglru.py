@@ -1,0 +1,126 @@
+"""RG-LRU recurrent mixer (recurrentgemma-2b), per arXiv:2402.19427 §2.4.
+
+Recurrent block: x -> [branch y: linear -> GeLU] x [branch h: linear ->
+causal conv(4) -> RG-LRU] -> elementwise product -> out projection.
+
+RG-LRU recurrence (gates use *block-diagonal* projections, width 256 — the
+paper's trick to keep the gate cost linear in width):
+
+    r_t = sigmoid(W_a x_t);  i_t = sigmoid(W_x x_t)
+    a_t = a^(c * r_t)  with  log a = -8 * softplus(Lambda),  c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train: associative scan over T (the transition tensor is [B, T, lru] — same
+footprint as activations, no chunking needed).  Decode: O(1) update.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import COMPUTE_DTYPE, _dense_init
+
+_C = 8.0
+
+
+class RGLRUCache(NamedTuple):
+    conv: jnp.ndarray   # [B, d_conv - 1, lru]
+    h: jnp.ndarray      # [B, lru] (f32)
+    pos: jnp.ndarray    # [B]
+
+
+def _dims(cfg):
+    r = cfg.rglru
+    lru = r.lru_width or cfg.d_model
+    assert lru % r.block_width == 0
+    return r, lru, lru // r.block_width
+
+
+def init_rglru(key, cfg) -> dict:
+    r, lru, nb = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    bw = r.block_width
+    return {
+        "in_y": _dense_init(ks[0], (cfg.d_model, lru)),
+        "in_x": _dense_init(ks[1], (cfg.d_model, lru)),
+        "conv_w": _dense_init(ks[2], (r.d_conv, lru)) * 0.1,
+        "conv_b": jnp.zeros((lru,), jnp.float32),
+        "wa": _dense_init(ks[3], (nb, bw, bw), in_axis=1),   # block-diagonal
+        "wx": _dense_init(ks[4], (nb, bw, bw), in_axis=1),
+        "lam": jnp.log(jnp.expm1(   # softplus^-1 so a ~ U(0.9, 0.999)
+            -jnp.log(jax.random.uniform(ks[5], (lru,), jnp.float32,
+                                        0.9, 0.999)) / 8.0)),
+        "out": _dense_init(ks[0], (lru, cfg.d_model)),
+    }
+
+
+def _block_proj(w, x, nb, bw):
+    """Block-diagonal projection: x [..., lru] @ blockdiag(w) -> [..., lru]."""
+    xs = x.reshape(x.shape[:-1] + (nb, bw))
+    return jnp.einsum("...nb,nbc->...nc", xs, w).reshape(x.shape)
+
+
+def _gates(p, xc, cfg):
+    r, lru, nb = _dims(cfg)
+    bw = r.block_width
+    xf = xc.astype(jnp.float32)
+    rt = jax.nn.sigmoid(_block_proj(p["wa"], xf, nb, bw))
+    it = jax.nn.sigmoid(_block_proj(p["wx"], xf, nb, bw))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * rt          # [..., lru]
+    a = jnp.exp(log_a)
+    # multiplier sqrt(1 - a^2), stable via log: 0.5*log1p(-exp(2 log_a))
+    mult = jnp.exp(0.5 * jnp.log1p(-jnp.exp(2.0 * log_a) + 1e-9))
+    bx = mult * it * xf
+    return a, bx
+
+
+def _conv(p, x, cfg, prefix=None):
+    r, lru, _ = _dims(cfg)
+    B, T, _ = x.shape
+    if prefix is None:
+        prefix = jnp.zeros((B, r.d_conv - 1, lru), x.dtype)
+    xp = jnp.concatenate([prefix, x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(r.d_conv):
+        out = out + xp[:, i:i + T, :] * p["conv_w"][i].astype(x.dtype)
+    return out + p["conv_b"].astype(x.dtype)
+
+
+def rglru_train(p, x, cfg) -> jnp.ndarray:
+    """x [B, T, d_model] -> [B, T, d_model]."""
+    c = COMPUTE_DTYPE
+    y = jax.nn.gelu(x @ p["in_y"].astype(c), approximate=True)
+    xb = x @ p["in_x"].astype(c)
+    xc = _conv(p, xb, cfg)
+    a, bx = _gates(p, xc, cfg)                             # [B, T, lru] f32
+
+    def combine(u, v):
+        return (u[0] * v[0], v[0] * u[1] + v[1])
+
+    _, hs = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    out = (hs.astype(c) * y) @ p["out"].astype(c)
+    return out
+
+
+def init_rglru_cache(cfg, batch: int) -> RGLRUCache:
+    r, lru, _ = _dims(cfg)
+    return RGLRUCache(jnp.zeros((batch, r.d_conv - 1, lru), COMPUTE_DTYPE),
+                      jnp.zeros((batch, lru), jnp.float32),
+                      jnp.zeros((batch,), jnp.int32))
+
+
+def rglru_decode(p, x, cfg, cache: RGLRUCache):
+    """x [B, 1, d_model] -> (y [B, 1, d_model], cache)."""
+    c = COMPUTE_DTYPE
+    y = jax.nn.gelu(x[:, 0] @ p["in_y"].astype(c), approximate=True)
+    xb = x[:, 0] @ p["in_x"].astype(c)                     # [B, lru]
+    window = jnp.concatenate([cache.conv, xb[:, None]], axis=1)
+    xc = jnp.einsum("btd,td->bd", window, p["conv_w"].astype(c)) \
+        + p["conv_b"].astype(c)
+    a, bx = _gates(p, xc, cfg)                             # [B, lru]
+    h = a * cache.h + bx
+    out = ((h.astype(c) * y) @ p["out"].astype(c))[:, None]
+    return out, RGLRUCache(window[:, 1:], h, cache.pos + 1)

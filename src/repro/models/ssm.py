@@ -1,0 +1,144 @@
+"""Mamba-1 selective-state-space mixer (falcon-mamba-7b).
+
+Train path: chunked associative scan — ``lax.scan`` over sequence chunks
+(carrying the [B, d_inner, d_state] state) with ``lax.associative_scan``
+inside each chunk.  The chunk bounds the [B, chunk, d_inner, d_state]
+discretized-transition tensor that a naive full-sequence associative scan
+would materialize (gigabytes at 4k x 8192 x 16) — this is the TPU adaptation
+of Mamba's fused CUDA scan (DESIGN.md §2): HBM traffic is bounded per chunk,
+and the scan skeleton exposes sequence parallelism to XLA.
+
+Decode path: O(1) recurrence update + conv ring buffer.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import COMPUTE_DTYPE, _dense_init
+
+SCAN_CHUNK = 256
+
+
+class MambaCache(NamedTuple):
+    conv: jnp.ndarray   # [B, d_conv - 1, d_inner] rolling inputs
+    h: jnp.ndarray      # [B, d_inner, d_state] SSM state (f32)
+    pos: jnp.ndarray    # [B] int32
+
+
+def _cfgdims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or math.ceil(cfg.d_model / 16)
+    return s, d_inner, dt_rank
+
+
+def init_mamba(key, cfg) -> dict:
+    s, d_inner, dt_rank = _cfgdims(cfg)
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, s.d_state + 1, dtype=jnp.float32),
+                 (d_inner, 1))
+    return {
+        "in_proj": _dense_init(ks[0], (cfg.d_model, 2 * d_inner)),
+        "conv_w": _dense_init(ks[1], (s.d_conv, d_inner)) * 0.1,
+        "conv_b": jnp.zeros((d_inner,), jnp.float32),
+        "x_proj": _dense_init(ks[2], (d_inner, dt_rank + 2 * s.d_state)),
+        "dt_proj": _dense_init(ks[3], (dt_rank, d_inner)),
+        "dt_bias": jnp.full((d_inner,), -4.6, jnp.float32),  # softplus ~ 0.01
+        "A_log": jnp.log(A),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": _dense_init(ks[4], (d_inner, cfg.d_model)),
+    }
+
+
+def _ssm_inputs(p, xc, cfg):
+    """Shared discretization: xc [..., d_inner] -> (dA, dBx, C_ssm)."""
+    s, _, dt_rank = _cfgdims(cfg)
+    proj = xc @ p["x_proj"].astype(xc.dtype)
+    dt, B_ssm, C_ssm = jnp.split(
+        proj, [dt_rank, dt_rank + s.d_state], axis=-1)
+    dt = jax.nn.softplus(
+        (dt @ p["dt_proj"].astype(xc.dtype)).astype(jnp.float32)
+        + p["dt_bias"])                                     # [..., d_inner]
+    A = -jnp.exp(p["A_log"])                                 # [d_inner, state]
+    dA = jnp.exp(dt[..., None] * A)                          # [..., d_in, st]
+    dBx = (dt * xc.astype(jnp.float32))[..., None] \
+        * B_ssm.astype(jnp.float32)[..., None, :]            # [..., d_in, st]
+    return dA, dBx, C_ssm.astype(jnp.float32)
+
+
+def _causal_conv(p, x, cfg, prefix=None):
+    """Depthwise causal conv over T.  prefix [B, d_conv-1, d_inner] or zeros."""
+    s, d_inner, _ = _cfgdims(cfg)
+    B, T, _ = x.shape
+    if prefix is None:
+        prefix = jnp.zeros((B, s.d_conv - 1, d_inner), x.dtype)
+    xp = jnp.concatenate([prefix, x], axis=1)                # [B, T+dc-1, di]
+    out = jnp.zeros_like(x, shape=(B, T, d_inner))
+    for i in range(s.d_conv):                                # tiny unroll (4)
+        out = out + xp[:, i:i + T, :] * p["conv_w"][i].astype(x.dtype)
+    return out + p["conv_b"].astype(x.dtype)
+
+
+def mamba_train(p, x, cfg) -> jnp.ndarray:
+    """x [B, T, d_model] -> [B, T, d_model]; T % SCAN_CHUNK == 0 (or T small)."""
+    s, d_inner, _ = _cfgdims(cfg)
+    B, T, _ = x.shape
+    c = COMPUTE_DTYPE
+    xz = x @ p["in_proj"].astype(c)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(p, x_in, cfg))             # [B, T, d_inner]
+
+    chunk = SCAN_CHUNK if T % SCAN_CHUNK == 0 else T
+    n_chunks = T // chunk
+    xc_c = xc.reshape(B, n_chunks, chunk, d_inner).transpose(1, 0, 2, 3)
+
+    def chunk_step(h, xck):                                  # h [B, d_in, st]
+        dA, dBx, C_ssm = _ssm_inputs(p, xck, cfg)            # [B, ch, di, st]
+
+        def combine(a, b):
+            return (a[0] * b[0], b[0] * a[1] + b[1])
+
+        pA, pBx = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+        hs = pA * h[:, None] + pBx                           # [B, ch, di, st]
+        y = jnp.einsum("bcds,bcs->bcd", hs, C_ssm)
+        return hs[:, -1], y
+
+    h0 = jnp.zeros((B, d_inner, s.d_state), jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, h0, xc_c)               # [nc, B, ch, di]
+    y = ys.transpose(1, 0, 2, 3).reshape(B, T, d_inner).astype(c)
+    y = y + p["D"].astype(c) * xc
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(c)
+
+
+def init_mamba_cache(cfg, batch: int) -> MambaCache:
+    s, d_inner, _ = _cfgdims(cfg)
+    return MambaCache(
+        jnp.zeros((batch, s.d_conv - 1, d_inner), COMPUTE_DTYPE),
+        jnp.zeros((batch, d_inner, s.d_state), jnp.float32),
+        jnp.zeros((batch,), jnp.int32))
+
+
+def mamba_decode(p, x, cfg, cache: MambaCache):
+    """One-token step: x [B, 1, d_model] -> (y [B, 1, d_model], cache)."""
+    s, d_inner, _ = _cfgdims(cfg)
+    B = x.shape[0]
+    c = COMPUTE_DTYPE
+    xz = x[:, 0] @ p["in_proj"].astype(c)
+    x_in, z = jnp.split(xz, 2, axis=-1)                      # [B, d_inner]
+    window = jnp.concatenate([cache.conv, x_in[:, None]], axis=1)
+    xc = jnp.einsum("btd,td->bd", window, p["conv_w"].astype(c)) \
+        + p["conv_b"].astype(c)
+    xc = jax.nn.silu(xc)
+    dA, dBx, C_ssm = _ssm_inputs(p, xc, cfg)                 # [B, di, st]
+    h = dA * cache.h + dBx
+    y = jnp.einsum("bds,bs->bd", h, C_ssm).astype(c)
+    y = y + p["D"].astype(c) * xc
+    y = y * jax.nn.silu(z)
+    out = (y @ p["out_proj"].astype(c))[:, None]
+    return out, MambaCache(window[:, 1:], h, cache.pos + 1)

@@ -1,0 +1,208 @@
+"""The scanned-block decoder trunk shared by 9 of the 10 archs.
+
+A *block* is one period of ``cfg.mixer_pattern`` (e.g. gemma2's
+(local, attn), recurrentgemma's (rglru, rglru, local)); the trunk is
+``n_layers / period`` identical blocks executed with ``lax.scan`` over
+stacked parameters — HLO size stays O(period), which is what lets the
+64-layer falcon-mamba dry-run lower in seconds, and remat is applied at block
+granularity (``cfg.remat``).
+
+Decode carries a per-pattern-position cache pytree stacked over blocks;
+the scan threads (params, cache) pairs and emits the updated cache.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rglru as R
+from repro.models import ssm as S
+from repro.sharding.specs import shard_hint
+
+
+def _norm_init(cfg):
+    return L.layernorm_init(cfg.d_model) if cfg.family == "audio" \
+        else L.rmsnorm_init(cfg.d_model)
+
+
+def _norm(p, x, cfg):
+    return L.layernorm(p, x, cfg.norm_eps) if cfg.family == "audio" \
+        else L.rmsnorm(p, x, cfg.norm_eps)
+
+
+def n_blocks(cfg) -> tuple:
+    """(full blocks, tail mixers): depth = full * period + tail.
+
+    A non-zero tail (e.g. recurrentgemma's 26 = 8 x 3 + 2) becomes one extra
+    unscanned partial block using pattern[:tail]."""
+    period = len(cfg.mixer_pattern)
+    return cfg.n_layers // period, cfg.n_layers % period
+
+
+def init_block(key, cfg, pattern=None) -> dict:
+    pattern = pattern or cfg.mixer_pattern
+    p = {}
+    keys = jax.random.split(key, 2 * len(pattern))
+    for i, kind in enumerate(pattern):
+        p[f"pre_{i}"] = _norm_init(cfg)
+        if kind in ("attn", "local"):
+            p[f"mix_{i}"] = L.init_attention(keys[2 * i], cfg)
+        elif kind == "mamba":
+            p[f"mix_{i}"] = S.init_mamba(keys[2 * i], cfg)
+        elif kind == "rglru":
+            p[f"mix_{i}"] = R.init_rglru(keys[2 * i], cfg)
+        else:
+            raise ValueError(kind)
+        if cfg.post_norms:
+            p[f"postmix_{i}"] = _norm_init(cfg)
+        if cfg.ff_kind != "none":
+            p[f"ffpre_{i}"] = _norm_init(cfg)
+            if cfg.ff_kind == "moe":
+                p[f"ff_{i}"] = M.init_moe(keys[2 * i + 1], cfg)
+            else:
+                p[f"ff_{i}"] = L.init_mlp(keys[2 * i + 1], cfg)
+            if cfg.post_norms:
+                p[f"postff_{i}"] = _norm_init(cfg)
+    return p
+
+
+def init_trunk(key, cfg) -> dict:
+    nb, tail = n_blocks(cfg)
+    keys = jax.random.split(key, nb + 1)
+    p = {"blocks": jax.vmap(lambda k: init_block(k, cfg))(keys[:nb])}
+    if tail:
+        p["tail"] = init_block(keys[-1], cfg, cfg.mixer_pattern[:tail])
+    return p
+
+
+def _apply_ff(bp, i, x, cfg, aux):
+    h = _norm(bp[f"ffpre_{i}"], x, cfg)
+    if cfg.ff_kind == "moe":
+        moe_fn = M.moe_ffn_ep if cfg.moe_impl == "ep" else M.moe_ffn
+        ff, a = moe_fn(bp[f"ff_{i}"], h, cfg)
+        aux = {k: aux.get(k, 0.0) + v for k, v in a.items()}
+    else:
+        ff = L.mlp(bp[f"ff_{i}"], h, cfg)
+    if cfg.post_norms:
+        ff = _norm(bp[f"postff_{i}"], ff, cfg)
+    return x + ff, aux
+
+
+def block_train(bp, x, cfg, positions, pattern=None) -> tuple:
+    aux: dict = {}
+    pattern = pattern or cfg.mixer_pattern
+    for i, kind in enumerate(pattern):
+        h = _norm(bp[f"pre_{i}"], x, cfg)
+        h = shard_hint(h, ("batch", "seq", "embed"))
+        if kind == "attn":
+            mx = L.attention_train(bp[f"mix_{i}"], h, cfg, kind="causal",
+                                   positions=positions)
+        elif kind == "local":
+            mx = L.attention_train(bp[f"mix_{i}"], h, cfg, kind="local",
+                                   positions=positions)
+        elif kind == "mamba":
+            mx = S.mamba_train(bp[f"mix_{i}"], h, cfg)
+        else:
+            mx = R.rglru_train(bp[f"mix_{i}"], h, cfg)
+        if cfg.post_norms:
+            mx = _norm(bp[f"postmix_{i}"], mx, cfg)
+        x = x + mx
+        if cfg.ff_kind != "none":
+            x, aux = _apply_ff(bp, i, x, cfg, aux)
+    return x, aux
+
+
+def trunk_train(tp, x, cfg, positions) -> tuple:
+    """x [B, T, d] -> (x, aux).  Scan over stacked blocks with block remat."""
+    fn = block_train
+    if cfg.remat == "block":
+        fn = jax.checkpoint(block_train, static_argnums=(2,))
+
+    aux0 = {"moe_aux_loss": jnp.zeros((), jnp.float32),
+            "moe_overflow": jnp.zeros((), jnp.float32)} \
+        if cfg.ff_kind == "moe" else {}
+
+    def step(carry, bp):
+        x, aux = carry
+        x, a = fn(bp, x, cfg, positions)
+        aux = {k: aux[k] + a.get(k, 0) for k in aux}
+        return (x, aux), None
+
+    (x, aux), _ = jax.lax.scan(step, (x, aux0), tp["blocks"])
+    if "tail" in tp:
+        _, tail_len = n_blocks(cfg)
+        x, a = block_train(tp["tail"], x, cfg, positions,
+                           cfg.mixer_pattern[:tail_len])
+        aux = {k: aux[k] + a.get(k, 0) for k in aux}
+    return x, aux
+
+
+# --- decode -------------------------------------------------------------------
+
+def init_block_cache(cfg, batch: int, max_seq: int, pattern=None) -> dict:
+    cache = {}
+    pattern = pattern or cfg.mixer_pattern
+    for i, kind in enumerate(pattern):
+        if kind in ("attn", "local"):
+            cache[f"c_{i}"] = L.init_kv_cache(cfg, batch, max_seq, kind)
+        elif kind == "mamba":
+            cache[f"c_{i}"] = S.init_mamba_cache(cfg, batch)
+        else:
+            cache[f"c_{i}"] = R.init_rglru_cache(cfg, batch)
+    return cache
+
+
+def init_trunk_cache(cfg, batch: int, max_seq: int) -> dict:
+    """Cache pytree: scanned part has a leading n_blocks axis per leaf."""
+    one = init_block_cache(cfg, batch, max_seq)
+    nb, tail = n_blocks(cfg)
+    cache = {"blocks": jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (nb,) + a.shape).copy(), one)}
+    if tail:
+        cache["tail"] = init_block_cache(cfg, batch, max_seq,
+                                         cfg.mixer_pattern[:tail])
+    return cache
+
+
+def block_decode(bp, x, cfg, cache: dict, pattern=None) -> tuple:
+    new_cache = {}
+    pattern = pattern or cfg.mixer_pattern
+    for i, kind in enumerate(pattern):
+        h = _norm(bp[f"pre_{i}"], x, cfg)
+        if kind in ("attn", "local"):
+            mx, nc = L.attention_decode(bp[f"mix_{i}"], h, cfg,
+                                        cache[f"c_{i}"], kind=kind)
+        elif kind == "mamba":
+            mx, nc = S.mamba_decode(bp[f"mix_{i}"], h, cfg, cache[f"c_{i}"])
+        else:
+            mx, nc = R.rglru_decode(bp[f"mix_{i}"], h, cfg, cache[f"c_{i}"])
+        new_cache[f"c_{i}"] = nc
+        if cfg.post_norms:
+            mx = _norm(bp[f"postmix_{i}"], mx, cfg)
+        x = x + mx
+        if cfg.ff_kind != "none":
+            x, _ = _apply_ff(bp, i, x, cfg, {})
+    return x, new_cache
+
+
+def trunk_decode(tp, x, cfg, cache) -> tuple:
+    """One-token step through all blocks; returns (x, new_cache)."""
+
+    def step(x, inp):
+        bp, cs = inp
+        x, ncs = block_decode(bp, x, cfg, cs)
+        return x, ncs
+
+    x, new_blocks = jax.lax.scan(step, x, (tp["blocks"], cache["blocks"]))
+    new_cache = {"blocks": new_blocks}
+    if "tail" in tp:
+        _, tail_len = n_blocks(cfg)
+        x, nt = block_decode(tp["tail"], x, cfg, cache["tail"],
+                             cfg.mixer_pattern[:tail_len])
+        new_cache["tail"] = nt
+    return x, new_cache

@@ -1,0 +1,8 @@
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,
+                               cosine_schedule, global_norm)
+from repro.optim.compress import (compress_int8, decompress_int8,
+                                  ef_compress_grads)
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "cosine_schedule",
+           "global_norm", "compress_int8", "decompress_int8",
+           "ef_compress_grads"]

@@ -1,0 +1,10 @@
+"""Distributed runtime: train/serve step factories, sharded atomic
+checkpointing with elastic restore, and fault-tolerance scaffolding
+(step retries, straggler detection, deterministic data re-generation)."""
+
+from repro.runtime.train import TrainState, make_train_step, train_state_init
+from repro.runtime.checkpoint import (latest_step, restore_checkpoint,
+                                      save_checkpoint)
+
+__all__ = ["TrainState", "make_train_step", "train_state_init",
+           "save_checkpoint", "restore_checkpoint", "latest_step"]

@@ -1,0 +1,86 @@
+"""Fault tolerance: step retries, straggler detection, elastic re-mesh.
+
+What a 1000+-node deployment needs and how this maps here (CPU container =
+single process, so failures are *injected* — the tests drive these paths):
+
+* **step retry** — ``guarded_step`` retries a failed step call; data is
+  regenerated deterministically from (step, shard) (data/pipeline.py), so a
+  retry is bit-identical.  Real XLA device errors surface as exceptions at
+  block_until_ready — exactly what we catch.
+* **straggler mitigation** — ``StragglerMonitor`` tracks per-host step wall
+  times (EWMA); hosts slower than ``threshold x`` the fleet median are
+  flagged for eviction.  In a real deployment the flag feeds the re-mesh.
+* **elastic re-mesh** — ``elastic_restore``: after membership change, build
+  the new mesh, recompute shardings for the SAME logical rules, and restore
+  the latest checkpoint onto it (checkpoints are mesh-agnostic).  Training
+  resumes at the checkpointed step; the data pipeline needs nothing (stateless).
+* **heartbeats** — ``Heartbeat`` timestamps; ``dead_hosts`` after a timeout.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.runtime.checkpoint import latest_step, restore_checkpoint
+
+
+def guarded_step(step_fn: Callable, state, batch, *, retries: int = 2,
+                 on_failure: Optional[Callable] = None):
+    """Run a step; on exception, rebuild inputs and retry (bounded)."""
+    last = None
+    for attempt in range(retries + 1):
+        try:
+            return step_fn(state, batch)
+        except Exception as e:  # noqa: BLE001 — device loss shows up this way
+            last = e
+            if on_failure is not None:
+                on_failure(attempt, e)
+    raise RuntimeError(f"step failed after {retries + 1} attempts") from last
+
+
+@dataclass
+class Heartbeat:
+    timeout_s: float = 30.0
+    last_seen: dict = field(default_factory=dict)
+
+    def beat(self, host: str, now: Optional[float] = None) -> None:
+        self.last_seen[host] = time.monotonic() if now is None else now
+
+    def dead_hosts(self, now: Optional[float] = None) -> list[str]:
+        now = time.monotonic() if now is None else now
+        return [h for h, t in self.last_seen.items()
+                if now - t > self.timeout_s]
+
+
+@dataclass
+class StragglerMonitor:
+    threshold: float = 2.0      # x median
+    alpha: float = 0.3          # EWMA
+    ewma: dict = field(default_factory=dict)
+
+    def record(self, host: str, step_time_s: float) -> None:
+        prev = self.ewma.get(host, step_time_s)
+        self.ewma[host] = (1 - self.alpha) * prev + self.alpha * step_time_s
+
+    def stragglers(self) -> list[str]:
+        if len(self.ewma) < 2:
+            return []
+        times = sorted(self.ewma.values())
+        median = times[len(times) // 2]
+        return [h for h, t in self.ewma.items()
+                if t > self.threshold * median]
+
+
+def elastic_restore(ckpt_dir: str, like_state, *, shardings=None):
+    """Resume from the newest checkpoint onto the CURRENT mesh/shardings.
+
+    Returns (state, step, extra) or (like_state, 0, {}) when no checkpoint
+    exists (cold start)."""
+    step = latest_step(ckpt_dir)
+    if step is None:
+        return like_state, 0, {}
+    state, extra = restore_checkpoint(ckpt_dir, step, like_state,
+                                      shardings=shardings)
+    return state, step, extra

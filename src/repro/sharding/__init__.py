@@ -1,0 +1,5 @@
+from repro.sharding.specs import (DEFAULT_RULES, logical_rules, param_specs,
+                                  shard_hint, spec_for)
+
+__all__ = ["DEFAULT_RULES", "logical_rules", "param_specs", "shard_hint",
+           "spec_for"]

@@ -1,0 +1,133 @@
+"""Parameter pytree -> logical-axes pytree (path/shape based).
+
+Used by the launcher to derive ``in_shardings``/``out_shardings`` for every
+parameter (and optimizer slot) from the DEFAULT_RULES table.  Rules are
+*fused-dim* style: wq's [d, H*hd] output dim shards over 'model' whenever the
+fused dim divides the axis, even if H alone does not — XLA re-shards the
+reshape inside attention (DESIGN.md §6; the divisibility fallback in
+spec_for replicates anything that does not divide).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+# last-key -> logical axes (without any leading scan/stack dims)
+_BY_NAME: dict = {
+    "embed": ("vocab", "embed"),
+    "head": ("embed", "vocab"),
+    "img_proj": (None, "embed"),
+    "frame_proj": (None, "embed"),
+    "wq": ("embed", "heads"),
+    "wk": ("embed", "kv_heads"),
+    "wv": ("embed", "kv_heads"),
+    "wo": ("heads", "embed"),
+    "bq": ("heads",),
+    "bk": ("kv_heads",),
+    "bv": ("kv_heads",),
+    "wg": ("embed", "ff"),
+    "wu": ("embed", "ff"),
+    "wd": ("ff", "embed"),
+    "bu": ("ff",),
+    "bd": ("embed",),
+    "router": ("embed", None),
+    # mamba
+    "in_proj": ("embed", "d_inner"),
+    "conv_w": (None, "d_inner"),
+    "conv_b": ("d_inner",),
+    "x_proj": ("d_inner", None),
+    "dt_proj": (None, "d_inner"),
+    "dt_bias": ("d_inner",),
+    "A_log": ("d_inner", None),
+    "D": ("d_inner",),
+    "out_proj": ("d_inner", "embed"),
+    # rg-lru
+    "in_y": ("embed", "lru"),
+    "in_x": ("embed", "lru"),
+    "wa": ("lru_blocks", None, None),
+    "wx": ("lru_blocks", None, None),
+    "lam": ("lru",),
+    "out": ("lru", "embed"),
+    # norms / misc: replicate
+    "scale": (None,),
+    "bias": (None,),
+}
+
+# keys under which the experts' 3D weights live (expert-sharded, EP)
+_MOE_WEIGHTS = ("wg", "wu", "wd")
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+    return out
+
+
+def param_axes(params, cfg=None) -> dict:
+    """Pytree of logical-axis tuples matching ``params``' structure.
+
+    With ``cfg`` the attention/expert dims carry their semantic quantum
+    (head count / expert count): a dim only shards when whole heads or
+    experts land per shard, else it replicates (specs.spec_for).  Expert
+    stacks declare a fallback: shard the expert dim when the count divides,
+    otherwise shard the per-expert FFN dim on the same mesh axis (qwen2-moe's
+    60 experts over 16 -> TP inside experts instead of full replication)."""
+    by_name = dict(_BY_NAME)
+    if cfg is not None:
+        H, Hk = ("heads", cfg.n_heads), ("kv_heads", cfg.n_kv_heads)
+        by_name.update(wq=("embed", H), wo=(H, "embed"),
+                       wk=("embed", Hk), wv=("embed", Hk),
+                       bq=(H,), bk=(Hk,), bv=(Hk,))
+    E = ("expert", cfg.moe.num_experts) if (cfg and cfg.moe) else "expert"
+
+    def one(path, leaf) -> Tuple:
+        names = _path_names(path)
+        last = names[-1] if names else ""
+        # MoE expert stacks: ff_* / {wg,wu,wd} with 3 trailing dims
+        if last in _MOE_WEIGHTS and any(n.startswith("ff_") for n in names) \
+                and "shared" not in names and leaf.ndim >= 3:
+            base: Tuple = (E, "ff", None) if last == "wd" \
+                else (E, None, "ff")
+        elif last in by_name:
+            base = by_name[last]
+        else:
+            base = (None,) * leaf.ndim
+        # leading stacked-block axes (trunk scan / enc/dec stacks)
+        extra = leaf.ndim - len(base)
+        if extra > 0:
+            base = ("layers",) * extra + base
+        elif extra < 0:
+            base = base[-leaf.ndim:] if leaf.ndim else ()
+        return tuple(base)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# decode-cache logical axes.  Every cache leaf carries a leading stacked-
+# layers dim (trunk scan / enc-dec stacks); the trailing dims map by name.
+_CACHE_BY_NAME: dict = {
+    "k": ("batch", "kv_seq", None, None),      # [B, S, Hk, hd]
+    "v": ("batch", "kv_seq", None, None),
+    "conv": ("batch", None, "d_inner"),        # [B, dc-1, width]
+    "h": ("batch", "d_inner", None),           # mamba [B, di, st] / rglru [B, lru]
+    "cross_k": ("batch", None, None, None),    # [B, F, Hk, hd]
+    "cross_v": ("batch", None, None, None),
+    "pos": ("batch",),
+}
+
+
+def cache_axes(cache) -> dict:
+    def one(path, leaf):
+        names = _path_names(path)
+        last = names[-1] if names else ""
+        base = _CACHE_BY_NAME.get(last, (None,) * (leaf.ndim - 1))
+        base = base[: leaf.ndim - 1]
+        return ("layers",) + tuple(base)
+
+    return jax.tree_util.tree_map_with_path(one, cache)

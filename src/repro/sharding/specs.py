@@ -1,0 +1,134 @@
+"""Logical-axis sharding: MaxText-style name -> mesh-axis rules, made
+divisibility-aware so awkward dims (14 heads, 51865 vocab, 60 experts) fall
+back to replication instead of failing to lower (DESIGN.md §6).
+
+Model code tags tensors with *logical* axis names via ``shard_hint``; the
+launcher binds (mesh, rules) with ``logical_rules`` and every hint becomes a
+``with_sharding_constraint``.  Outside a binding the hints are no-ops, so
+unit tests run on one device untouched.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis (or tuple of mesh axes). None = replicate.
+DEFAULT_RULES: dict = {
+    "batch": ("pod", "data"),     # DP over pod x data
+    "seq": None,
+    "kv_seq": "model",            # decode KV cache length (flash-decode SP)
+    "embed": None,
+    "ff": "model",                # TP: MLP hidden
+    "heads": "model",             # TP: attention q heads (fused H*hd dim)
+    "kv_heads": "model",          # TP: kv heads (falls back when indivisible)
+    "vocab": "model",             # TP: embedding/unembedding
+    "expert": "model",            # EP: expert-sharded MoE weights
+    "d_inner": "model",           # Mamba inner width
+    "lru": "model",               # RG-LRU width
+    "layers": None,               # scanned-block leading axis
+    None: None,
+}
+
+_ctx = threading.local()
+
+
+@contextmanager
+def logical_rules(mesh: Mesh, rules: Optional[dict] = None):
+    """Bind (mesh, rules) for shard_hint / param_specs in this thread."""
+    prev = getattr(_ctx, "bind", None)
+    _ctx.bind = (mesh, {**DEFAULT_RULES, **(rules or {})})
+    try:
+        yield
+    finally:
+        _ctx.bind = prev
+
+
+def current_binding():
+    return getattr(_ctx, "bind", None)
+
+
+def _mesh_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape.get(a, 1)
+        return n
+    return mesh.shape.get(axis, 1)
+
+
+def spec_for(names: Sequence, shape: Sequence[int],
+             mesh: Mesh, rules: dict) -> P:
+    """PartitionSpec from logical names, dropping indivisible shardings.
+
+    An entry may be ``(name, quantum)``: the dim holds ``quantum`` semantic
+    units (attention heads, experts) and only shards when whole units land
+    per shard — e.g. qwen2-0.5b's fused q dim (14 heads x 64) is divisible
+    by 16 *bytes-wise* but sharding it would split heads across shards and
+    force per-layer resharding, so it replicates instead (found via the
+    prefill_32k collective blow-up; EXPERIMENTS.md §Perf)."""
+    parts = []
+    for name, dim in zip(names, shape):
+        quantum = None
+        if isinstance(name, tuple):
+            name, quantum = name
+        axis = rules.get(name)
+        if axis is not None and isinstance(axis, tuple):
+            axis = tuple(a for a in axis if a in mesh.shape)
+            axis = axis or None
+        if axis is not None and not isinstance(axis, tuple) \
+                and axis not in mesh.shape:
+            axis = None
+        size = _mesh_size(mesh, axis)
+        ok = (axis is not None and dim > 0 and dim % size == 0
+              and (quantum is None or quantum % size == 0))
+        parts.append(axis if ok else None)
+    # a mesh axis may appear once per spec: keep the first (highest-priority)
+    # use, replicate the rest — lets axes express fallbacks like "shard the
+    # expert dim if divisible, else the expert-FFN dim" on the same axis.
+    seen: set = set()
+    out = []
+    for p in parts:
+        flat = p if isinstance(p, tuple) else (p,)
+        if p is not None and any(a in seen for a in flat):
+            out.append(None)
+        else:
+            out.append(p)
+            seen.update(a for a in flat if a is not None)
+    return P(*out)
+
+
+def shard_hint(x, names: Sequence[Optional[str]]):
+    """with_sharding_constraint if a (mesh, rules) binding is active."""
+    bind = current_binding()
+    if bind is None:
+        return x
+    mesh, rules = bind
+    spec = spec_for(names, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def is_axes_leaf(x) -> bool:
+    """An axes-tree leaf: tuple of str | None | (str, int quantum)."""
+    return isinstance(x, tuple) and all(
+        isinstance(n, (str, type(None)))
+        or (isinstance(n, tuple) and len(n) == 2 and isinstance(n[0], str))
+        for n in x)
+
+
+def param_specs(axes_tree, shapes_tree, mesh: Mesh,
+                rules: Optional[dict] = None):
+    """Map a pytree of logical-axis tuples + matching shapes to
+    NamedShardings (for jit in_shardings / out_shardings)."""
+    rules = {**DEFAULT_RULES, **(rules or {})}
+
+    def one(names, leaf):
+        return NamedSharding(mesh, spec_for(names, leaf.shape, mesh, rules))
+
+    return jax.tree.map(one, axes_tree, shapes_tree, is_leaf=is_axes_leaf)

@@ -1,0 +1,49 @@
+"""Shared fixtures.  NB: no XLA_FLAGS here — unit/smoke tests must see the
+real single-device CPU backend; multi-device distributed tests run in
+subprocesses that set --xla_force_host_platform_device_count themselves."""
+
+import numpy as np
+import pytest
+
+from repro.core.relation import relation
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_pair(rng, n=1 << 13, keys1=(0, 500), keys2=(400, 900),
+              mu1=10.0, mu2=5.0):
+    """Two overlapping relations (keys 400..499 shared)."""
+    r1 = relation(rng.integers(*keys1, n).astype(np.uint32),
+                  rng.normal(mu1, 2, n).astype(np.float32))
+    r2 = relation(rng.integers(*keys2, n).astype(np.uint32),
+                  rng.normal(mu2, 1, n).astype(np.float32))
+    return r1, r2
+
+
+def numpy_join_sum(r1, r2, expr="sum"):
+    """Brute-force oracle: SUM over the join output of v1+v2 (or v1*v2)."""
+    import collections
+
+    from repro.core.relation import to_numpy
+
+    k1, v1 = to_numpy(r1)
+    k2, v2 = to_numpy(r2)
+    d2 = collections.defaultdict(list)
+    for k, v in zip(k2, v2):
+        d2[int(k)].append(v)
+    total, count = 0.0, 0
+    d1 = collections.defaultdict(list)
+    for k, v in zip(k1, v1):
+        d1[int(k)].append(v)
+    for k in set(d1) & set(d2):
+        a = np.array(d1[k], np.float64)
+        b = np.array(d2[k], np.float64)
+        count += len(a) * len(b)
+        if expr == "sum":
+            total += len(b) * a.sum() + len(a) * b.sum()
+        else:
+            total += a.sum() * b.sum()
+    return total, count

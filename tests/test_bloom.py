@@ -1,0 +1,131 @@
+"""Bloom sketch properties: no false negatives (ever), FPR within bound,
+filter algebra (Alg. 1), Appendix-B size models."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bloom
+
+U32 = st.integers(min_value=0, max_value=2**32 - 2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(U32, min_size=1, max_size=300), st.integers(0, 5))
+def test_no_false_negatives(keys, seed):
+    ks = jnp.asarray(np.array(keys, np.uint32))
+    nb = bloom.num_blocks_for(len(keys), 0.01)
+    f = bloom.build(ks, jnp.ones(len(keys), bool), nb, seed)
+    assert bool(bloom.contains(f, ks).all())
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(U32, min_size=1, max_size=100),
+       st.lists(U32, min_size=1, max_size=100), st.integers(0, 3))
+def test_union_covers_both(a, b, seed):
+    nb = bloom.num_blocks_for(200, 0.01)
+    fa = bloom.build(jnp.asarray(np.array(a, np.uint32)),
+                     jnp.ones(len(a), bool), nb, seed)
+    fb = bloom.build(jnp.asarray(np.array(b, np.uint32)),
+                     jnp.ones(len(b), bool), nb, seed)
+    u = bloom.union(fa, fb)
+    both = jnp.asarray(np.array(a + b, np.uint32))
+    assert bool(bloom.contains(u, both).all())
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(U32, min_size=1, max_size=100),
+       st.lists(U32, min_size=1, max_size=100), st.integers(0, 3))
+def test_intersect_superset_of_intersection(a, b, seed):
+    """AND of filters contains (at least) the true intersection (§3.1)."""
+    nb = bloom.num_blocks_for(200, 0.01)
+    fa = bloom.build(jnp.asarray(np.array(a, np.uint32)),
+                     jnp.ones(len(a), bool), nb, seed)
+    fb = bloom.build(jnp.asarray(np.array(b, np.uint32)),
+                     jnp.ones(len(b), bool), nb, seed)
+    inter = bloom.intersect(fa, fb)
+    common = sorted(set(a) & set(b))
+    if common:
+        ks = jnp.asarray(np.array(common, np.uint32))
+        assert bool(bloom.contains(inter, ks).all())
+
+
+def test_fpr_within_bound():
+    n = 20_000
+    keys = jnp.arange(n, dtype=jnp.uint32)
+    for target in (0.1, 0.01, 0.001):
+        nb = bloom.num_blocks_for(n, target)
+        f = bloom.build(keys, jnp.ones(n, bool), nb, seed=3)
+        probe = jnp.arange(10 * n, 12 * n, dtype=jnp.uint32)
+        fpr = float(bloom.contains(f, probe).mean())
+        # split-block costs a small constant vs optimal flat; allow 4x slack
+        assert fpr <= max(4 * target, 5e-4), (target, fpr)
+        pred = bloom.false_positive_rate(nb, n)
+        assert fpr <= 3 * pred + 1e-4
+
+
+def test_valid_mask_respected():
+    keys = jnp.arange(100, dtype=jnp.uint32)
+    valid = keys < 50
+    nb = bloom.num_blocks_for(100, 0.001)
+    f = bloom.build(keys, valid, nb, seed=1)
+    assert bool(bloom.contains(f, keys[:50]).all())
+    # invalid keys mostly absent (none were added)
+    assert float(bloom.contains(f, keys[50:]).mean()) < 0.2
+
+
+def test_eq27_sizing_monotonic():
+    assert bloom.num_blocks_for(1000, 0.01) <= bloom.num_blocks_for(
+        10_000, 0.01)
+    assert bloom.num_blocks_for(1000, 0.01) <= bloom.num_blocks_for(
+        1000, 0.001)
+
+
+def test_counting_filter_remove():
+    nb = 64
+    keys = jnp.arange(100, dtype=jnp.uint32)
+    f = bloom.counting_empty(nb, seed=2)
+    f = bloom.counting_add(f, keys, jnp.ones(100, bool))
+    assert bool(bloom.counting_contains(f, keys).all())
+    f = bloom.counting_add(f, keys[:50], jnp.ones(50, bool), sign=-1)
+    assert bool(bloom.counting_contains(f, keys[50:]).all())
+    assert float(bloom.counting_contains(f, keys[:50]).mean()) < 0.3
+
+
+def test_appendix_b_size_ordering():
+    """Fig. 15: regular < counting < invertible; scalable finite."""
+    n, p = 100_000, 0.01
+    flat = bloom.flat_filter_bits(n, p)
+    cbf = bloom.counting_filter_bits(n, p)
+    ibf = bloom.invertible_filter_bits(n, p)
+    sbf = bloom.scalable_filter_bits(n, p)
+    assert flat < cbf < ibf
+    assert sbf > 0
+
+
+def test_fill_fraction_near_half_at_design_load():
+    n = 50_000
+    nb = bloom.num_blocks_for(n, 0.01)
+    f = bloom.build(jnp.arange(n, dtype=jnp.uint32), jnp.ones(n, bool), nb)
+    assert 0.2 < float(bloom.fill_fraction(f)) < 0.6
+
+
+def test_scalable_filter_grows_and_merges():
+    """Appendix B-III: SBF spills to new stages past capacity, never loses a
+    key, and merges stage-pairwise (the paper's upstream-PR union)."""
+    from repro.core.bloom import ScalableFilter
+    a = ScalableFilter(initial_capacity=256, fp_rate=0.01, seed=1)
+    ka = np.arange(2000, dtype=np.uint32)
+    a.add(ka)
+    assert len(a.stages) >= 3           # grew past the initial capacity
+    assert bool(a.contains(ka).all())
+    b = ScalableFilter(initial_capacity=256, fp_rate=0.01, seed=1)
+    kb = np.arange(5000, 6000, dtype=np.uint32)
+    b.add(kb)
+    m = a.merge(b)
+    assert bool(m.contains(ka).all()) and bool(m.contains(kb).all())
+    fpr = float(m.contains(np.arange(10**5, 10**5 + 10**4,
+                                     dtype=np.uint32)).mean())
+    assert fpr < 0.15

@@ -1,0 +1,90 @@
+"""Data substrates + ApproxJoin-driven batch mixture + baseline quality
+ordering (Fig. 1 property)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (QueryBudget, accuracy_loss, approx_join, native_join,
+                        postjoin_sampling, prejoin_sampling)
+from repro.core.relation import relation
+from repro.data import flows, netflix, pipeline, synthetic, tpch
+
+
+def test_overlap_fraction_control():
+    for target in (0.01, 0.05, 0.2):
+        rels = synthetic.overlapping_relations([4096, 4096], target, seed=1)
+        res = approx_join(rels, QueryBudget(), max_strata=2048)
+        got = float(res.diagnostics.overlap_fraction)
+        assert abs(got - target) < max(0.3 * target, 0.01), (target, got)
+
+
+def test_fig1_accuracy_ordering():
+    """Pre-join sampling is far less accurate than sampling during the join
+    at equal fraction (the paper's motivating figure)."""
+    rng = np.random.default_rng(1)
+    n = 1 << 13
+    r1 = relation(rng.integers(0, 500, n).astype(np.uint32),
+                  rng.normal(10, 2, n).astype(np.float32))
+    r2 = relation(rng.integers(400, 900, n).astype(np.uint32),
+                  rng.normal(5, 1, n).astype(np.float32))
+    exact = float(native_join([r1, r2]).estimate)
+    frac = 0.05
+    pre = prejoin_sampling([r1, r2], frac, seed=3)
+    dur = approx_join([r1, r2],
+                      QueryBudget(error=1.0, pilot_fraction=frac),
+                      max_strata=1024, b_max=2048, seed=3)
+    err_pre = abs(float(accuracy_loss(pre.estimate, exact)))
+    err_dur = abs(float(accuracy_loss(dur.estimate, exact)))
+    assert err_dur < err_pre / 5, (err_pre, err_dur)
+    post = postjoin_sampling([r1, r2], frac, seed=3, max_strata=1024)
+    err_post = abs(float(accuracy_loss(post.estimate, exact)))
+    # during-join ~ post-join accuracy (same stratified estimator)
+    assert err_dur < 5 * max(err_post, 1e-4)
+
+
+def test_tpch_generator_invariants():
+    t = tpch.generate(scale=0.005, seed=2)
+    assert len(t.customer_key) == len(set(t.customer_key.tolist()))
+    assert set(t.orders_custkey.tolist()) <= set(t.customer_key.tolist())
+    assert set(t.lineitem_orderkey.tolist()) <= set(t.orders_key.tolist())
+    # the paper's CUSTOMER |><| ORDERS query runs end to end
+    rels = tpch.q_customer_orders(t)
+    res = approx_join(rels, QueryBudget(), max_strata=1 << 13)
+    assert float(res.count) == len(t.orders_custkey)  # FK join: 1 cust/order
+
+
+def test_flows_ratios_and_query():
+    rels = flows.flow_tables(scale=2048, shared_fraction=0.05, seed=0)
+    sizes = [int(r.count()) for r in rels]
+    assert sizes[0] > sizes[1] > sizes[2]
+    assert abs(sizes[0] / sizes[2] - 115_472_322 / 2_801_002) < 2.0
+    res = approx_join(rels[::-1], QueryBudget(), max_strata=4096)
+    assert float(res.count) > 0
+
+
+def test_netflix_skew():
+    qual, train = netflix.ratings_tables(1 << 14, 1 << 11, seed=1)
+    ratings = np.asarray(train.values)
+    assert set(np.unique(ratings)) <= {1.0, 2.0, 3.0, 4.0, 5.0}
+
+
+def test_mixture_plan_and_counts():
+    rng = np.random.default_rng(0)
+    docs = relation(rng.integers(0, 32, 2048).astype(np.uint32),
+                    rng.random(2048).astype(np.float32))
+    doms = relation(np.arange(32, dtype=np.uint32),
+                    np.ones(32, np.float32))
+    plan = pipeline.plan_batch_mixture(docs, doms, QueryBudget(error=0.1))
+    assert abs(plan.weights.sum() - 1.0) < 1e-5
+    counts = pipeline.mixture_shard_counts(plan, batch=64)
+    assert counts.sum() == 64 and (counts >= 0).all()
+
+
+def test_structured_stream_is_learnable():
+    """The affine chain: next token is deterministic on ~7/8 of positions."""
+    b = pipeline.lm_batch(0, 0, batch=4, seq=256, vocab=97, structured=True)
+    t = np.asarray(b["tokens"])
+    nxt = np.asarray(b["targets"])
+    pred = (t * 3 + 7) % 97
+    frac = float((pred == nxt).mean())
+    assert frac > 0.8, frac

@@ -1,0 +1,232 @@
+"""Distributed join pipeline on 8 placeholder host devices.
+
+Runs in a SUBPROCESS with --xla_force_host_platform_device_count=8 so the
+rest of the suite keeps the real single-device backend (per the assignment's
+instruction not to set XLA_FLAGS globally)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.relation import relation
+from repro.core.distributed import distributed_approx_join
+from repro.core.join import approx_join
+from repro.core.budget import QueryBudget
+
+mesh = jax.make_mesh((8,), ('data',))
+rng = np.random.default_rng(0)
+N = 1 << 14
+r1 = relation(rng.integers(0, 1000, N).astype(np.uint32),
+              rng.normal(10, 2, N).astype(np.float32))
+r2 = relation(rng.integers(800, 1800, N).astype(np.uint32),
+              rng.normal(5, 1, N).astype(np.float32))
+
+single = approx_join([r1, r2], QueryBudget())
+dist = distributed_approx_join(mesh, [r1, r2], mode='exact')
+assert abs(float(dist.estimate) - float(single.estimate)) \
+    / abs(float(single.estimate)) < 1e-5, 'exact mismatch'
+assert float(dist.count) == float(single.count), 'count mismatch'
+assert int(dist.bucket_overflow) == 0
+assert int(dist.strata_overflow) == 0
+
+# sampling: valid CI around the exact answer
+samp = distributed_approx_join(mesh, [r1, r2], mode='sample',
+                               sample_fraction=0.1, b_max=512)
+rel = abs(float(samp.estimate) - float(single.estimate)) \
+    / abs(float(single.estimate))
+assert rel < 0.02, f'sampled rel err {rel}'
+assert abs(float(samp.estimate) - float(single.estimate)) \
+    <= 4 * float(samp.error_bound)
+
+# filtering shrinks the measured wire bytes vs repartition (no filter)
+rep = distributed_approx_join(mesh, [r1, r2], mode='exact',
+                              filter_stage=False)
+assert abs(float(rep.estimate) - float(single.estimate)) \
+    / abs(float(single.estimate)) < 1e-5, 'repartition exact mismatch'
+assert float(dist.shuffled_tuple_bytes) < 0.35 * float(
+    rep.shuffled_tuple_bytes), (float(dist.shuffled_tuple_bytes),
+                                float(rep.shuffled_tuple_bytes))
+
+# 3-way multiway join
+from repro.data.synthetic import overlapping_relations
+rels = overlapping_relations([1 << 13] * 3, 0.05, seed=2)
+s3 = approx_join(rels, QueryBudget(), max_strata=4096)
+d3 = distributed_approx_join(mesh, rels, mode='exact', max_strata=4096)
+assert abs(float(d3.estimate) - float(s3.estimate)) \
+    / max(abs(float(s3.estimate)), 1) < 1e-5, '3-way mismatch'
+
+# shard_map EP MoE == GSPMD MoE (bit-identical logits)
+import dataclasses
+from repro.models import ARCHS, Model
+from repro.sharding.specs import logical_rules
+mesh_m = jax.make_mesh((2, 4), ('data', 'model'))
+cfg = ARCHS['qwen2-moe-a2.7b'].reduced()
+cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+    cfg.moe, capacity_factor=8.0))
+toks = jax.random.randint(jax.random.key(1), (4, 32), 0, cfg.vocab)
+outs = {}
+for impl in ('gspmd', 'ep'):
+    mdl = Model(dataclasses.replace(cfg, moe_impl=impl))
+    prm = mdl.init(jax.random.key(0))
+    with logical_rules(mesh_m):
+        lg, _ = jax.jit(mdl.forward)(prm, {'tokens': toks})
+    outs[impl] = np.asarray(lg, np.float32)
+dmax = np.abs(outs['gspmd'] - outs['ep']).max()
+assert dmax / np.abs(outs['gspmd']).max() < 2e-2, f'EP parity: {dmax}'
+
+# multi-axis mesh: join over ('pod','data') with a model axis present
+mesh2 = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'))
+d2 = distributed_approx_join(mesh2, [r1, r2], mode='exact',
+                             join_axes=('pod', 'data'))
+assert abs(float(d2.estimate) - float(single.estimate)) \
+    / abs(float(single.estimate)) < 1e-5, 'multi-pod mismatch'
+print('DISTRIBUTED-OK')
+"""
+
+
+@pytest.mark.slow
+def test_distributed_join_8dev():
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "DISTRIBUTED-OK" in out.stdout
+
+
+_ELASTIC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.data.pipeline import lm_batch
+from repro.models import ARCHS, Model
+from repro.runtime.checkpoint import restore_checkpoint, save_checkpoint
+from repro.runtime.train import make_train_step, train_state_init
+from repro.sharding.axes import param_axes
+from repro.sharding.specs import logical_rules, param_specs
+from repro.optim.adamw import AdamWState
+from repro.runtime.train import TrainState
+import tempfile
+
+cfg = ARCHS['qwen2-0.5b'].reduced(vocab=128, d_model=64, d_ff=128)
+model = Model(cfg)
+step = make_train_step(model, total_steps=6, warmup=2)
+batches = [lm_batch(i, 0, batch=8, seq=32, vocab=cfg.vocab, structured=True)
+           for i in range(6)]
+
+def shardings_for(mesh, state):
+    p_axes = param_axes(state.params, cfg)
+    st_axes = TrainState(p_axes, AdamWState((), p_axes, p_axes), None)
+    return param_specs(st_axes, state, mesh)
+
+# phase 1: train 3 steps on a (4, 2) mesh, checkpoint
+mesh_a = jax.make_mesh((4, 2), ('data', 'model'))
+state = train_state_init(model, jax.random.key(0))
+with logical_rules(mesh_a):
+    jstep = jax.jit(step)
+    for b in batches[:3]:
+        state, _ = jstep(state, b)
+tmp = tempfile.mkdtemp()
+save_checkpoint(tmp, 3, state)
+
+# phase 2: "node failure" -> NEW mesh topology (2, 2, 2), elastic restore
+mesh_b = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'))
+fresh = train_state_init(model, jax.random.key(0))
+restored, _ = restore_checkpoint(tmp, 3, fresh,
+                                 shardings=shardings_for(mesh_b, fresh))
+with logical_rules(mesh_b):
+    jstep_b = jax.jit(step)
+    for b in batches[3:]:
+        restored, metrics = jstep_b(restored, b)
+
+# reference: straight-through on mesh A
+straight = train_state_init(model, jax.random.key(0))
+with logical_rules(mesh_a):
+    for b in batches:
+        straight, _ = jstep(straight, b)
+
+for a, c in zip(jax.tree.leaves(straight.params),
+                jax.tree.leaves(restored.params)):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(c, np.float32),
+                               rtol=5e-3, atol=5e-4)
+assert bool(jnp.isfinite(metrics['loss']))
+print('ELASTIC-OK')
+"""
+
+
+@pytest.mark.slow
+def test_elastic_restore_across_mesh_topologies():
+    """Checkpoint on a (4,2) mesh, restore onto (2,2,2) after a simulated
+    membership change, continue training: parameters match the straight
+    run to collective-reordering tolerance."""
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", _ELASTIC], env=env,
+                         capture_output=True, text=True, timeout=900,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "ELASTIC-OK" in out.stdout
+
+
+_COMPRESS = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+from repro.data.pipeline import lm_batch
+from repro.models import ARCHS, Model
+from repro.runtime.train import make_train_step, train_state_init
+
+mesh = jax.make_mesh((8,), ('data',))
+cfg = ARCHS['qwen2-0.5b'].reduced(vocab=128, d_model=64, d_ff=128)
+model = Model(cfg)
+
+# compressed-DP: the whole step runs inside shard_map over 'data'; grads
+# psum through the int8 error-feedback path instead of XLA's all-reduce
+step = make_train_step(model, total_steps=20, warmup=2,
+                       compress_axes=('data',))
+state = train_state_init(model, jax.random.key(0), compress=True)
+
+def sharded_step(state, batch):
+    fn = shard_map(step, mesh=mesh,
+                   in_specs=(P(), {'tokens': P('data'),
+                                   'targets': P('data')}),
+                   out_specs=(P(), P()),
+                   check_rep=False)
+    return fn(state, batch)
+
+jstep = jax.jit(sharded_step)
+losses = []
+for i in range(20):
+    b = lm_batch(i, 0, batch=16, seq=32, vocab=cfg.vocab, structured=True)
+    state, m = jstep(state, b)
+    losses.append(float(m['loss']))
+assert np.isfinite(losses).all(), losses
+assert np.mean(losses[-5:]) < np.mean(losses[:5]), losses
+# error-feedback buffers are live (non-zero residuals)
+res = sum(float(jnp.abs(e).sum()) for e in jax.tree.leaves(state.ef_error))
+assert res > 0
+print('COMPRESS-OK', losses[0], '->', losses[-1])
+"""
+
+
+@pytest.mark.slow
+def test_int8_ef_compressed_dp_training():
+    """Training with int8 error-feedback gradient compression over an
+    8-way DP axis: loss decreases, EF residuals are live."""
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", _COMPRESS], env=env,
+                         capture_output=True, text=True, timeout=900,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "COMPRESS-OK" in out.stdout

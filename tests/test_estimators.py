@@ -1,0 +1,132 @@
+"""Estimator correctness: t-quantiles, CLT coverage, Horvitz-Thompson
+unbiasedness, distributed-merge equivalence."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.estimators import (StratumStats, clt_count, clt_finish,
+                                   clt_sum, clt_sum_parts,
+                                   horvitz_thompson_sum,
+                                   inclusion_probability, t_quantile)
+
+# two-sided 97.5% t quantiles (scipy.stats.t.ppf(0.975, df))
+_T975 = {5: 2.5706, 10: 2.2281, 30: 2.0423, 100: 1.9840, 1000: 1.9623}
+
+
+def test_t_quantile_known_values():
+    for df, want in _T975.items():
+        got = float(t_quantile(0.975, df))
+        assert abs(got - want) < 2e-2, (df, got, want)
+    assert abs(float(t_quantile(0.975, 1e6)) - 1.95996) < 1e-3
+
+
+def test_t_quantile_monotone_in_confidence():
+    df = 20.0
+    qs = [float(t_quantile(p, df)) for p in (0.9, 0.95, 0.975, 0.995)]
+    assert qs == sorted(qs)
+
+
+def _stats_from_population(rng, pops, sample_frac):
+    """Draw with replacement from synthetic strata; return stats + truth."""
+    valid, B, b, sf, sf2 = [], [], [], [], []
+    truth = 0.0
+    for i, n in enumerate(pops):
+        vals = rng.normal(5.0 + i, 1.0 + 0.2 * i, size=n)
+        truth += vals.sum()
+        k = max(int(n * sample_frac), 2)
+        pick = rng.choice(vals, size=k, replace=True)
+        valid.append(True)
+        B.append(float(n))
+        b.append(float(k))
+        sf.append(float(pick.sum()))
+        sf2.append(float((pick ** 2).sum()))
+    stats = StratumStats(jnp.asarray(valid), jnp.asarray(B, jnp.float32),
+                         jnp.asarray(b, jnp.float32),
+                         jnp.asarray(sf, jnp.float32),
+                         jnp.asarray(sf2, jnp.float32))
+    return stats, truth
+
+
+def test_clt_coverage():
+    """95% CI covers the truth at roughly the nominal rate."""
+    rng = np.random.default_rng(7)
+    pops = [50, 200, 1000, 3000]
+    hits = 0
+    trials = 120
+    for _ in range(trials):
+        stats, truth = _stats_from_population(rng, pops, 0.1)
+        est = clt_sum(stats, 0.95)
+        hits += bool(est.lo <= truth <= est.hi)
+    assert hits / trials >= 0.85, hits / trials
+
+
+def test_clt_count_exact():
+    stats = StratumStats(jnp.asarray([True, True, False]),
+                         jnp.asarray([10.0, 20.0, 99.0]),
+                         jnp.asarray([2.0, 2.0, 0.0]),
+                         jnp.zeros(3), jnp.zeros(3))
+    assert float(clt_count(stats)) == 30.0
+
+
+def test_parts_merge_equals_direct():
+    """psum-style merge of per-shard parts == single-shot estimate."""
+    rng = np.random.default_rng(3)
+    s1, t1 = _stats_from_population(rng, [100, 500], 0.2)
+    s2, t2 = _stats_from_population(rng, [300, 50], 0.2)
+    merged = clt_sum_parts(s1)
+    p2 = clt_sum_parts(s2)
+    merged = type(merged)(*[a + b for a, b in zip(merged, p2)])
+    est_merged = clt_finish(merged)
+    whole = StratumStats(*[jnp.concatenate([a, b])
+                           for a, b in zip(s1, s2)])
+    est_whole = clt_sum(whole)
+    np.testing.assert_allclose(float(est_merged.estimate),
+                               float(est_whole.estimate), rtol=1e-6)
+    np.testing.assert_allclose(float(est_merged.error_bound),
+                               float(est_whole.error_bound), rtol=1e-5)
+
+
+def test_inclusion_probability_limits():
+    # tiny sample of a huge stratum: pi ~ b/B
+    pi = float(inclusion_probability(jnp.asarray(1e6), jnp.asarray(10.0)))
+    assert abs(pi - 1e-5) / 1e-5 < 0.01
+    # sampling B-with-replacement draws: pi -> 1 - 1/e
+    pi = float(inclusion_probability(jnp.asarray(100.0), jnp.asarray(100.0)))
+    assert abs(pi - (1 - np.exp(-1))) < 0.01
+
+
+def test_horvitz_thompson_unbiased():
+    """HT over deduplicated draws averages to the truth."""
+    rng = np.random.default_rng(11)
+    B = 200
+    vals = rng.normal(3.0, 1.0, size=B)
+    truth = vals.sum()
+    ests = []
+    for _ in range(200):
+        k = 60
+        idx = rng.integers(0, B, size=k)
+        uniq = np.unique(idx)
+        stats = StratumStats(jnp.asarray([True]),
+                             jnp.asarray([float(B)]),
+                             jnp.asarray([float(k)]),
+                             jnp.asarray([0.0]), jnp.asarray([0.0]))
+        est = horvitz_thompson_sum(stats,
+                                   jnp.asarray([float(vals[uniq].sum())]),
+                                   jnp.asarray([float(len(uniq))]))
+        ests.append(float(est.estimate))
+    assert abs(np.mean(ests) - truth) / abs(truth) < 0.03
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(1, 1e4), min_size=1, max_size=8),
+       st.floats(0.01, 1.0))
+def test_clt_variance_nonnegative(pops, frac):
+    rng = np.random.default_rng(0)
+    stats, _ = _stats_from_population(rng, [max(int(p), 3) for p in pops],
+                                      max(frac, 0.05))
+    est = clt_sum(stats)
+    assert float(est.variance) >= 0.0
+    assert float(est.error_bound) >= 0.0

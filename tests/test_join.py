@@ -1,0 +1,179 @@
+"""End-to-end approx_join behaviour vs brute-force oracles: exact path,
+sampled path with CI, HT dedup path, budget machinery, kernel parity,
+sigma feedback."""
+
+import numpy as np
+import pytest
+
+from conftest import make_pair, numpy_join_sum
+from repro.core.budget import QueryBudget, parse_budget
+from repro.core.cost import (CostModel, SigmaRegistry, predicted_latency,
+                             sizes_for_error, sizes_for_latency)
+from repro.core.join import approx_join
+
+
+def test_exact_path_matches_numpy(rng):
+    r1, r2 = make_pair(rng, n=1 << 12)
+    want, want_cnt = numpy_join_sum(r1, r2)
+    res = approx_join([r1, r2], QueryBudget(), max_strata=1024)
+    assert res.diagnostics.sampled is False
+    np.testing.assert_allclose(float(res.estimate), want, rtol=1e-4)
+    assert float(res.count) == want_cnt
+
+
+def test_exact_product_expr(rng):
+    r1, r2 = make_pair(rng, n=1 << 11)
+    want, _ = numpy_join_sum(r1, r2, expr="product")
+    res = approx_join([r1, r2], QueryBudget(), expr="product",
+                      max_strata=1024)
+    np.testing.assert_allclose(float(res.estimate), want, rtol=1e-3)
+
+
+def test_sampled_path_accuracy_and_ci(rng):
+    r1, r2 = make_pair(rng)
+    want, _ = numpy_join_sum(r1, r2)
+    res = approx_join([r1, r2], QueryBudget(error=0.5, pilot_fraction=0.1),
+                      max_strata=1024, b_max=1024, seed=5)
+    assert res.diagnostics.sampled is True
+    rel_err = abs(float(res.estimate) - want) / abs(want)
+    assert rel_err < 0.02, rel_err
+    assert abs(float(res.estimate) - want) <= 3 * float(res.error_bound)
+
+
+def test_count_and_avg_aggregates(rng):
+    r1, r2 = make_pair(rng, n=1 << 11)
+    want, want_cnt = numpy_join_sum(r1, r2)
+    cnt = approx_join([r1, r2], QueryBudget(error=0.5), agg="count",
+                      max_strata=1024, b_max=256)
+    assert float(cnt.estimate) == want_cnt  # count is exact given strata
+    avg = approx_join([r1, r2], QueryBudget(error=0.5), agg="avg",
+                      max_strata=1024, b_max=256)
+    np.testing.assert_allclose(float(avg.estimate), want / want_cnt,
+                               rtol=0.05)
+
+
+def test_horvitz_thompson_dedup_path(rng):
+    r1, r2 = make_pair(rng, n=1 << 12)
+    want, _ = numpy_join_sum(r1, r2)
+    res = approx_join([r1, r2], QueryBudget(error=0.5, pilot_fraction=0.2),
+                      max_strata=1024, b_max=512, dedup=True, seed=2)
+    rel_err = abs(float(res.estimate) - want) / abs(want)
+    assert rel_err < 0.05, rel_err
+
+
+def test_kernel_path_bit_identical(rng):
+    r1, r2 = make_pair(rng, n=1 << 12)
+    a = approx_join([r1, r2], QueryBudget(error=0.5), max_strata=512,
+                    b_max=256, seed=3)
+    b = approx_join([r1, r2], QueryBudget(error=0.5), max_strata=512,
+                    b_max=256, seed=3, use_kernels=True)
+    assert float(a.estimate) == float(b.estimate)
+    assert float(a.error_bound) == float(b.error_bound)
+
+
+def test_filter_reduces_shuffle_volume(rng):
+    # ~4% key overlap — the low-overlap regime where the paper's filter
+    # shines (Fig. 9); at bench scale the |BF| broadcast cost is included.
+    r1, r2 = make_pair(rng, keys2=(480, 980))
+    res = approx_join([r1, r2], QueryBudget(), max_strata=1024)
+    d = res.diagnostics
+    assert float(d.shuffled_bytes_filtered) < 0.5 * float(
+        d.shuffled_bytes_repartition)
+    # higher overlap -> less saving (monotone in the right direction)
+    r1h, r2h = make_pair(rng, keys2=(400, 900))   # ~20% overlap
+    dh = approx_join([r1h, r2h], QueryBudget(), max_strata=1024).diagnostics
+    assert float(dh.shuffled_bytes_filtered) > float(
+        d.shuffled_bytes_filtered)
+
+
+def test_multiway_join_exact(rng):
+    from repro.data.synthetic import overlapping_relations
+    rels = overlapping_relations([2048, 2048, 2048], 0.1, seed=3)
+    res = approx_join(rels, QueryBudget(), max_strata=2048)
+    # brute force on the smallest data
+    import collections
+    maps = []
+    for r in rels:
+        m = collections.defaultdict(list)
+        k, v = np.asarray(r.keys), np.asarray(r.values)
+        for kk, vv in zip(k, v):
+            m[int(kk)].append(float(vv))
+        maps.append(m)
+    want = 0.0
+    for key in set(maps[0]) & set(maps[1]) & set(maps[2]):
+        segs = [np.array(m[key]) for m in maps]
+        n = [len(s) for s in segs]
+        want += (segs[0].sum() * n[1] * n[2] + segs[1].sum() * n[0] * n[2]
+                 + segs[2].sum() * n[0] * n[1])
+    np.testing.assert_allclose(float(res.estimate), want, rtol=1e-3)
+
+
+def test_budget_parsing():
+    b = parse_budget("WITHIN 120 SECONDS")
+    assert b.latency_s == 120.0 and b.error is None
+    b = parse_budget("ERROR 0.01 CONFIDENCE 95%")
+    assert b.error == 0.01 and b.confidence == 0.95
+    b = parse_budget("WITHIN 5 SECONDS OR ERROR 0.1 CONFIDENCE 99%")
+    assert b.latency_s == 5.0 and b.error == 0.1 and b.confidence == 0.99
+    with pytest.raises(ValueError):
+        parse_budget("GIMME RESULTS")
+
+
+def test_cost_function_latency_inverse():
+    """Eq. 5/6/7 are mutually consistent: predicted latency of the chosen
+    b_i hits the budget."""
+    cost = CostModel(beta_compute=1e-6, epsilon=0.01)
+    pop = np.array([1e4, 1e5, 1e6], np.float32)
+    d_desired, d_dt = 0.5, 0.05
+    b = np.asarray(sizes_for_latency(cost, d_desired, d_dt, pop))
+    pred = float(predicted_latency(cost, b, d_dt))
+    assert pred <= d_desired * 1.05
+    assert (b >= 1).all() and (b <= pop + 1).all()
+
+
+def test_cost_function_error_formula():
+    b = np.asarray(sizes_for_error(0.1, np.array([2.0]), np.array([1e9])))
+    # b = (1.96 * 2 / 0.1)^2 ~ 1537
+    assert abs(b[0] - (1.96 * 2 / 0.1) ** 2) / b[0] < 0.05
+
+
+def test_sigma_feedback_improves_second_run(rng, tmp_path):
+    """§3.2-II: with stored sigma the error budget is met with a targeted
+    sample size rather than the pilot fraction."""
+    r1, r2 = make_pair(rng)
+    reg = SigmaRegistry()
+    b1 = approx_join([r1, r2], QueryBudget(error=2.0, pilot_fraction=0.02),
+                     max_strata=1024, b_max=512, sigma_registry=reg,
+                     query_id="q1", seed=7)
+    assert reg.has("q1")
+    b2 = approx_join([r1, r2], QueryBudget(error=2.0),
+                     max_strata=1024, b_max=512, sigma_registry=reg,
+                     query_id="q1", seed=8)
+    # second run tunes per-stratum sizes from sigma; bound should be tight
+    assert float(b2.error_bound) > 0.0
+    # registry round-trips through JSON (restart durability)
+    reg.save(tmp_path / "sigma.json")
+    reg2 = SigmaRegistry.load(tmp_path / "sigma.json")
+    assert reg2.has("q1")
+
+
+def test_latency_budget_exact_fastpath(rng):
+    """§3.1.1: when the exact join fits the latency budget, no sampling."""
+    r1, r2 = make_pair(rng, n=1 << 10)
+    cost = CostModel(beta_compute=1e-12, epsilon=0.0)  # absurdly fast box
+    res = approx_join([r1, r2], QueryBudget(latency_s=100.0),
+                      cost_model=cost, max_strata=1024)
+    assert res.diagnostics.sampled is False
+    want, _ = numpy_join_sum(r1, r2)
+    np.testing.assert_allclose(float(res.estimate), want, rtol=1e-4)
+
+
+def test_stdev_aggregate(rng):
+    """STDEV of v1+v2 over the join ~ sqrt(var1 + var2) for independent
+    normals (values are independent of keys here)."""
+    r1, r2 = make_pair(rng, n=1 << 13)  # v1~N(10,2), v2~N(5,1)
+    res = approx_join([r1, r2], QueryBudget(error=0.1, pilot_fraction=0.2),
+                      agg="stdev", max_strata=1024, b_max=1024, seed=4)
+    want = np.sqrt(2.0**2 + 1.0**2)
+    assert abs(float(res.estimate) - want) / want < 0.05, float(res.estimate)
+    assert float(res.error_bound) > 0

@@ -1,0 +1,116 @@
+"""Pallas kernel sweeps: shapes x seeds x fp-rates, bit-exact vs the ref.py
+oracles (interpret mode on CPU; same code Mosaic-compiles on TPU)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bloom
+from repro.core.relation import relation, sort_by_key
+from repro.core.sampling import build_strata, sample_edges
+from repro.kernels import ops, ref
+from repro.kernels.bloom_build import bloom_hashes
+from repro.kernels.bloom_probe import bloom_probe
+from repro.kernels.edge_sample import edge_sample
+
+
+@pytest.mark.parametrize("n", [2048, 4096, 8192])
+@pytest.mark.parametrize("seed", [0, 7])
+def test_bloom_hashes_sweep(n, seed):
+    keys = jnp.asarray(np.random.default_rng(seed).integers(
+        0, 2**32 - 1, n, dtype=np.uint32))
+    nb = bloom.num_blocks_for(n, 0.01)
+    blk, masks = bloom_hashes(keys, nb, seed, interpret=True)
+    rblk, rmasks = ref.bloom_hashes_ref(keys, nb, seed)
+    np.testing.assert_array_equal(np.asarray(blk), np.asarray(rblk))
+    np.testing.assert_array_equal(np.asarray(masks), np.asarray(rmasks))
+
+
+@pytest.mark.parametrize("n,fp", [(2048, 0.1), (4096, 0.01), (2048, 0.001)])
+def test_bloom_probe_sweep(n, fp):
+    rng = np.random.default_rng(n)
+    keys = jnp.asarray(rng.integers(0, 1 << 20, n, dtype=np.uint32))
+    nb = bloom.num_blocks_for(n, fp)
+    f = bloom.build(keys, jnp.ones(n, bool), nb, seed=3)
+    probe = jnp.asarray(rng.integers(0, 1 << 21, 4096, dtype=np.uint32))
+    got = bloom_probe(f.words, probe, seed=3, interpret=True)
+    want = ref.bloom_probe_ref(f.words, probe, seed=3)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_build_filter_wrapper_pads_and_matches():
+    rng = np.random.default_rng(1)
+    for n in (100, 2048, 5000):  # non-multiples exercise padding
+        keys = jnp.asarray(rng.integers(0, 1 << 16, n, dtype=np.uint32))
+        valid = jnp.asarray(rng.random(n) > 0.2)
+        nb = bloom.num_blocks_for(n, 0.01)
+        a = bloom.build(keys, valid, nb, seed=5)
+        b = ops.build_filter(keys, valid, nb, seed=5, interpret=True)
+        np.testing.assert_array_equal(np.asarray(a.words),
+                                      np.asarray(b.words))
+        m1 = bloom.contains(a, keys)
+        m2 = ops.probe_filter(a.words, keys, seed=5, interpret=True)
+        np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+
+
+@pytest.mark.parametrize("S,b_max", [(128, 64), (256, 128), (384, 256)])
+@pytest.mark.parametrize("expr", ["sum", "product"])
+def test_edge_sample_sweep(S, b_max, expr):
+    rng = np.random.default_rng(S + b_max)
+    n = 4096
+    r1 = sort_by_key(relation(
+        rng.integers(0, S // 2, n).astype(np.uint32),
+        rng.normal(3, 1, n).astype(np.float32)))
+    r2 = sort_by_key(relation(
+        rng.integers(S // 4, S, n).astype(np.uint32),
+        rng.normal(1, 2, n).astype(np.float32)))
+    strata = build_strata([r1, r2], S)
+    b_i = jnp.ceil(0.3 * strata.population)
+    got = edge_sample(r1.values, r2.values, strata.keys,
+                      strata.starts[0], strata.counts[0],
+                      strata.starts[1], strata.counts[1],
+                      strata.joinable, b_i.astype(jnp.float32),
+                      b_max, seed=11, expr=expr, interpret=True)
+    want = ref.edge_sample_ref(r1.values, r2.values, strata.keys,
+                               strata.starts[0], strata.counts[0],
+                               strata.starts[1], strata.counts[1],
+                               strata.joinable, b_i.astype(jnp.float32),
+                               b_max, seed=11, expr=expr)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-6, atol=1e-4)
+
+
+def test_edge_sample_matches_core_sampler():
+    """Kernel == the full core sampler (which also does dedup bookkeeping)."""
+    rng = np.random.default_rng(9)
+    n = 2048
+    r1 = sort_by_key(relation(rng.integers(0, 40, n).astype(np.uint32),
+                              rng.normal(0, 1, n).astype(np.float32)))
+    r2 = sort_by_key(relation(rng.integers(20, 60, n).astype(np.uint32),
+                              rng.normal(0, 1, n).astype(np.float32)))
+    strata = build_strata([r1, r2], 128)
+    b_i = jnp.minimum(strata.population, 100.0)
+    core = sample_edges([r1, r2], strata, b_i, 128, seed=4)
+    kern = ops.sample_stats([r1, r2], strata, b_i, 128, seed=4,
+                            interpret=True)
+    np.testing.assert_array_equal(np.asarray(core.stats.n_sampled),
+                                  np.asarray(kern.n_sampled))
+    np.testing.assert_allclose(np.asarray(core.stats.sum_f),
+                               np.asarray(kern.sum_f), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(core.stats.sum_f2),
+                               np.asarray(kern.sum_f2), rtol=1e-6)
+
+
+def test_vmem_guards():
+    """Wrappers refuse working sets beyond the VMEM budget."""
+    big = jnp.zeros((1 << 22,), jnp.float32)  # 16 MiB > 8 MiB budget
+    with pytest.raises(AssertionError):
+        edge_sample(big, big, jnp.zeros((128,), jnp.uint32),
+                    jnp.zeros((128,), jnp.int32), jnp.ones((128,), jnp.int32),
+                    jnp.zeros((128,), jnp.int32), jnp.ones((128,), jnp.int32),
+                    jnp.ones((128,), bool), jnp.ones((128,), jnp.float32),
+                    64)
+    with pytest.raises(AssertionError):
+        bloom_probe(jnp.zeros((1 << 19, 8), jnp.uint32),
+                    jnp.zeros((2048,), jnp.uint32))

@@ -1,0 +1,220 @@
+"""Per-arch smoke tests (assignment requirement: reduced config, one
+forward/train step on CPU, shape + finiteness asserts) plus decode parity
+and layer-level properties."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ARCHS, Model
+from repro.models.model import CLIP_DIM
+from repro.runtime.train import make_train_step, train_state_init
+
+ALL_ARCHS = list(ARCHS)
+
+
+def _batch(cfg, B=2, T=32, key=0):
+    rng = np.random.default_rng(key)
+    toks = rng.integers(0, cfg.vocab, (B, T + 1))
+    batch = {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+             "targets": jnp.asarray(toks[:, 1:], jnp.int32)}
+    if cfg.num_img_tokens:
+        batch["img_embeds"] = jnp.asarray(
+            rng.normal(0, 1, (B, cfg.num_img_tokens, CLIP_DIM)), jnp.float32)
+    if cfg.is_encdec:
+        e = cfg.encoder
+        batch["frames"] = jnp.asarray(
+            rng.normal(0, 1, (B, e.n_frames, e.d_input)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_arch_smoke_forward_and_train_step(arch):
+    """Reduced same-family config: forward shapes + one train step, no NaN."""
+    cfg = ARCHS[arch].reduced()
+    model = Model(cfg)
+    B, T = 2, 32
+    batch = _batch(cfg, B, T)
+    state = train_state_init(model, jax.random.key(0))
+    logits, _ = model.forward(state.params, batch)
+    assert logits.shape == (B, T, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+    step = make_train_step(model, total_steps=10, warmup=2)
+    state2, metrics = jax.jit(step)(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert float(metrics["loss"]) > 0
+    # params actually changed
+    d0 = jax.tree.leaves(state.params)[0]
+    d1 = jax.tree.leaves(state2.params)[0]
+    assert not np.allclose(np.asarray(d0), np.asarray(d1))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_arch_smoke_decode_step(arch):
+    cfg = ARCHS[arch].reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    B, S = 2, 48
+    if cfg.is_encdec:
+        e = cfg.encoder
+        frames = jnp.zeros((B, e.n_frames, e.d_input), jnp.float32)
+        cache = model.init_cache(params, B, S, frames)
+    else:
+        cache = model.init_cache(None, B, S)
+    toks = jnp.asarray([1, 2], jnp.int32)
+    logits, cache = model.decode_step(params, toks, cache)
+    assert logits.shape == (B, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "falcon-mamba-7b",
+                                  "recurrentgemma-2b"])
+def test_decode_matches_forward(arch):
+    """Step-by-step decode reproduces the teacher-forced last-position
+    logits (strict for attention; small scan-order tolerance for SSM)."""
+    cfg = ARCHS[arch].reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    B, T = 2, 24
+    toks = jax.random.randint(jax.random.key(1), (B, T), 0, cfg.vocab)
+    logits_train, _ = model.forward(params, {"tokens": toks})
+    cache = model.init_cache(None, B, T)
+    step = jax.jit(model.decode_step)
+    for t in range(T):
+        logits_dec, cache = step(params, toks[:, t], cache)
+    scale = float(jnp.abs(logits_train[:, -1]).max())
+    diff = float(jnp.abs(logits_train[:, -1] - logits_dec).max())
+    assert diff / scale < 0.08, diff / scale
+
+
+def test_moe_decode_lossless_capacity():
+    """With train-mode capacity drops disabled, MoE decode is bit-exact."""
+    cfg = ARCHS["qwen2-moe-a2.7b"].reduced()
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    B, T = 2, 16
+    toks = jax.random.randint(jax.random.key(1), (B, T), 0, cfg.vocab)
+    logits_train, _ = model.forward(params, {"tokens": toks})
+    cache = model.init_cache(None, B, T)
+    for t in range(T):
+        logits_dec, cache = model.decode_step(params, toks[:, t], cache)
+    np.testing.assert_allclose(np.asarray(logits_train[:, -1]),
+                               np.asarray(logits_dec), atol=1e-3)
+
+
+def test_local_attention_equals_global_when_window_covers():
+    """A local layer with window >= seq is exactly causal attention."""
+    from repro.models import layers as L
+    cfg = ARCHS["qwen3-1.7b"].reduced(window=1024)
+    p = L.init_attention(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 16, cfg.d_model),
+                          L.COMPUTE_DTYPE)
+    a = L.attention_train(p, x, cfg, kind="causal")
+    b = L.attention_train(p, x, cfg, kind="local")
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=1e-4)
+
+
+def test_local_ring_buffer_consistency():
+    """Decode with ring cache == decode with full cache inside the window."""
+    cfg = ARCHS["gemma2-9b"].reduced(window=8)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    B, T = 1, 20
+    toks = jax.random.randint(jax.random.key(2), (B, T), 0, cfg.vocab)
+    # ground truth: teacher-forced forward (local masking in train mode)
+    logits_train, _ = model.forward(params, {"tokens": toks})
+    cache = model.init_cache(None, B, T)
+    for t in range(T):
+        logits_dec, cache = model.decode_step(params, toks[:, t], cache)
+    scale = float(jnp.abs(logits_train[:, -1]).max())
+    diff = float(jnp.abs(logits_train[:, -1] - logits_dec).max())
+    assert diff / scale < 0.08, diff / scale
+
+
+def test_mamba_chunked_scan_matches_unchunked():
+    from repro.models import ssm as S
+    cfg = ARCHS["falcon-mamba-7b"].reduced()
+    p = S.init_mamba(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 512, cfg.d_model),
+                          jnp.float32)  # 512 = 2 chunks of 256
+    y_chunked = S.mamba_train(p, x, cfg)
+    # force single chunk by monkeypatching chunk size
+    old = S.SCAN_CHUNK
+    try:
+        S.SCAN_CHUNK = 512
+        y_whole = S.mamba_train(p, x, cfg)
+    finally:
+        S.SCAN_CHUNK = old
+    np.testing.assert_allclose(np.asarray(y_chunked, np.float32),
+                               np.asarray(y_whole, np.float32),
+                               atol=2e-2, rtol=1e-2)
+
+
+def test_vlm_image_prefix_changes_logits():
+    cfg = ARCHS["phi-3-vision-4.2b"].reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    b1 = _batch(cfg, key=1)
+    b2 = {**b1, "img_embeds": b1["img_embeds"] + 1.0}
+    l1, _ = model.forward(params, b1)
+    l2, _ = model.forward(params, b2)
+    assert float(jnp.abs(l1 - l2).max()) > 1e-3
+
+
+def test_whisper_encoder_states_feed_decoder():
+    cfg = ARCHS["whisper-small"].reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    b1 = _batch(cfg, key=1)
+    b2 = {**b1, "frames": b1["frames"] + 1.0}
+    l1, _ = model.forward(params, b1)
+    l2, _ = model.forward(params, b2)
+    assert float(jnp.abs(l1 - l2).max()) > 1e-3
+
+
+def test_gradients_flow_everywhere():
+    """Every parameter leaf of a hybrid arch receives nonzero gradient."""
+    cfg = ARCHS["recurrentgemma-2b"].reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _batch(cfg, key=3)
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    zero_leaves = [jax.tree_util.keystr(path)
+                   for path, g in
+                   jax.tree_util.tree_flatten_with_path(grads)[0]
+                   if float(jnp.abs(g).max()) == 0.0]
+    assert zero_leaves == [], zero_leaves
+
+
+def test_chunked_attention_matches_dense():
+    """Flash-style KV-chunked softmax == dense attention (bf16 tolerance),
+    for every mask kind and with gemma2's softcap."""
+    from repro.models import layers as L
+    for arch, kind in [("qwen3-1.7b", "causal"), ("qwen3-1.7b", "local"),
+                       ("qwen3-1.7b", "full"), ("gemma2-9b", "local")]:
+        cfg = ARCHS[arch].reduced()
+        cfgc = dataclasses.replace(cfg, attn_chunk=16)
+        p = L.init_attention(jax.random.key(0), cfg)
+        x = jax.random.normal(jax.random.key(1), (2, 64, cfg.d_model),
+                              L.COMPUTE_DTYPE)
+        a = jnp.asarray(L.attention_train(p, x, cfg, kind=kind), jnp.float32)
+        b = jnp.asarray(L.attention_train(p, x, cfgc, kind=kind),
+                        jnp.float32)
+        rel = float(jnp.abs(a - b).max()) / float(jnp.abs(a).max())
+        assert rel < 1e-2, (arch, kind, rel)
+
+
+def test_chunked_attention_gradients():
+    cfg = dataclasses.replace(ARCHS["qwen3-1.7b"].reduced(), attn_chunk=16)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _batch(cfg, B=2, T=64)
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    assert all(bool(jnp.isfinite(g).all()) for g in jax.tree.leaves(grads))
+    assert sum(float(jnp.abs(g).sum()) for g in jax.tree.leaves(grads)) > 0

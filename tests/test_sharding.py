@@ -1,0 +1,99 @@
+"""Sharding rules: divisibility-aware spec construction and the logical-axes
+trees for parameters and caches (single-device safe — no mesh needed beyond
+a trivial one)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.models import ARCHS, Model
+from repro.sharding.axes import cache_axes, param_axes
+from repro.sharding.specs import DEFAULT_RULES, spec_for
+
+
+class FakeMesh:
+    """Duck-typed mesh with just .shape (spec_for only reads sizes)."""
+
+    def __init__(self, **shape):
+        self.shape = shape
+
+
+def test_spec_divisibility_fallback():
+    mesh = FakeMesh(data=16, model=16)
+    # divisible dims shard
+    assert spec_for(("ff",), (4864,), mesh, DEFAULT_RULES) == P("model")
+    # indivisible dims replicate instead of failing
+    assert spec_for(("ff",), (4863,), mesh, DEFAULT_RULES) == P(None)
+    # vocab 51865 (whisper) is odd -> replicated
+    assert spec_for(("vocab", "embed"), (51865, 768), mesh,
+                    DEFAULT_RULES) == P(None, None)
+    # vocab 151936 divides 16 -> sharded
+    assert spec_for(("vocab", "embed"), (151936, 896), mesh,
+                    DEFAULT_RULES) == P("model", None)
+
+
+def test_spec_tuple_axes_and_missing_axes():
+    mesh = FakeMesh(pod=2, data=16, model=16)
+    assert spec_for(("batch", None), (256, 128), mesh, DEFAULT_RULES) \
+        == P(("pod", "data"), None)
+    # batch=1 (long_500k) cannot shard over 32 -> replicated
+    assert spec_for(("batch", None), (1, 128), mesh, DEFAULT_RULES) \
+        == P(None, None)
+    # single-pod mesh: 'pod' axis dropped from the tuple
+    mesh2 = FakeMesh(data=16, model=16)
+    assert spec_for(("batch",), (256,), mesh2, DEFAULT_RULES) == P(("data",))
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "moonshot-v1-16b-a3b",
+                                  "falcon-mamba-7b", "recurrentgemma-2b",
+                                  "whisper-small"])
+def test_param_axes_cover_every_leaf(arch):
+    cfg = ARCHS[arch].reduced()
+    model = Model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.key(0))
+    axes = param_axes(shapes)
+    flat_s = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    flat_a = jax.tree.leaves(axes, is_leaf=_is_axes_leaf)
+    assert len(flat_s) == len(flat_a)
+    for (path, leaf), ax in zip(flat_s, flat_a):
+        assert len(ax) == leaf.ndim, (jax.tree_util.keystr(path), ax,
+                                      leaf.shape)
+
+
+def _is_axes_leaf(x):
+    return isinstance(x, tuple) and all(
+        isinstance(n, (str, type(None))) for n in x)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "falcon-mamba-7b",
+                                  "recurrentgemma-2b"])
+def test_cache_axes_cover_every_leaf(arch):
+    cfg = ARCHS[arch].reduced()
+    model = Model(cfg)
+    shapes = model.cache_shape(batch=2, max_seq=32)
+    axes = cache_axes(shapes)
+    flat_s = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    flat_a = jax.tree.leaves(axes, is_leaf=_is_axes_leaf)
+    assert len(flat_s) == len(flat_a)
+    for (path, leaf), ax in zip(flat_s, flat_a):
+        assert len(ax) == leaf.ndim, (jax.tree_util.keystr(path), ax,
+                                      leaf.shape)
+
+
+def test_expert_weights_marked_for_ep():
+    cfg = ARCHS["qwen2-moe-a2.7b"].reduced()
+    model = Model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.key(0))
+    axes = param_axes(shapes)
+    found = []
+
+    def visit(path, ax):
+        names = [str(getattr(p, "key", "")) for p in path]
+        if any(n.startswith("ff_") for n in names) and "wg" in names \
+                and "shared" not in names:
+            found.append(ax)
+
+    jax.tree_util.tree_map_with_path(visit, axes, is_leaf=_is_axes_leaf)
+    assert found and all(ax[-3] == "expert" for ax in found), found
