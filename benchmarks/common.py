@@ -5,12 +5,20 @@ ratios, accuracy curves), which is what the figures plot."""
 
 from __future__ import annotations
 
+import os
 import time
 
 import jax
 import numpy as np
 
-from repro.core.relation import relation
+# Smoke mode (CI gate): every figure script runs end-to-end at reduced scale.
+# Set by `python -m benchmarks.run --smoke` before the figure modules import.
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") not in ("", "0")
+
+
+def scaled(full, smoke):
+    """Pick the smoke-mode value when REPRO_BENCH_SMOKE is set."""
+    return smoke if SMOKE else full
 
 
 def timed(fn, *args, repeats: int = 3, **kw):

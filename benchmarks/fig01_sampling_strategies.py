@@ -3,14 +3,12 @@
 
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import pair_with_overlap, row, timed
+from benchmarks.common import pair_with_overlap, row, scaled, timed
 from repro.core import (QueryBudget, approx_join, native_join,
                         postjoin_sampling, prejoin_sampling)
 
-FRACTIONS = (0.01, 0.05, 0.1, 0.5)
-N = 1 << 13
+FRACTIONS = scaled((0.01, 0.05, 0.1, 0.5), (0.05, 0.5))
+N = scaled(1 << 13, 1 << 11)
 
 
 def run() -> list[dict]:

@@ -6,12 +6,12 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import row, scaled
 from repro.core.cost import calibrate_beta
 
 
 def run() -> list[dict]:
-    sizes = (1 << 14, 1 << 16, 1 << 18, 1 << 20)
+    sizes = scaled((1 << 14, 1 << 16, 1 << 18, 1 << 20), (1 << 12, 1 << 14))
     cost = calibrate_beta(sizes=sizes, repeats=3)
     rows = [row("fig05", beta_compute=f"{cost.beta_compute:.3e}",
                 epsilon=f"{cost.epsilon:.3e}")]

@@ -8,14 +8,14 @@ import time
 
 import jax
 
-from benchmarks.common import pair_with_overlap, row
-from repro.core import (QueryBudget, approx_join, native_join,
+from benchmarks.common import pair_with_overlap, row, scaled
+from repro.core import (QueryBudget, approx_join,
                         postjoin_sampling)
 from repro.core.bloom import num_blocks_for
 from repro.core.join import build_join_filter, filter_relations
 
-N = 1 << 14
-OVERLAPS = (0.01, 0.04, 0.1, 0.2)
+N = scaled(1 << 14, 1 << 11)
+OVERLAPS = scaled((0.01, 0.04, 0.1, 0.2), (0.04, 0.2))
 
 
 def run() -> list[dict]:

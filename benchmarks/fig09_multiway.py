@@ -3,12 +3,11 @@
 
 from __future__ import annotations
 
-from benchmarks.common import row, timed
-from repro.core import QueryBudget, approx_join, volume_repartition
-from repro.core.join import TUPLE_BYTES
+from benchmarks.common import row, scaled, timed
+from repro.core import QueryBudget, approx_join
 from repro.data.synthetic import overlapping_relations
 
-N = 1 << 13
+N = scaled(1 << 13, 1 << 11)
 
 
 def run() -> list[dict]:

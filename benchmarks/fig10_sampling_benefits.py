@@ -4,13 +4,13 @@
 
 from __future__ import annotations
 
-from benchmarks.common import pair_with_overlap, row, timed
+from benchmarks.common import pair_with_overlap, row, scaled, timed
 from repro.core import (QueryBudget, approx_join, native_join,
                         postjoin_sampling, volume_approxjoin,
                         volume_repartition)
 from repro.core.bloom import num_blocks_for
 
-N = 1 << 14
+N = scaled(1 << 14, 1 << 11)
 
 
 def run() -> list[dict]:

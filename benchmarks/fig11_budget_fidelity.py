@@ -7,11 +7,11 @@ import time
 
 import jax
 
-from benchmarks.common import pair_with_overlap, row
+from benchmarks.common import pair_with_overlap, row, scaled
 from repro.core import QueryBudget, approx_join, native_join
 from repro.core.cost import calibrate_pipeline
 
-N = 1 << 14
+N = scaled(1 << 14, 1 << 12)
 
 
 def run() -> list[dict]:

@@ -5,11 +5,11 @@ CUSTOMER |><| ORDERS money query."""
 
 from __future__ import annotations
 
-from benchmarks.common import row, timed
+from benchmarks.common import row, scaled, timed
 from repro.core import QueryBudget, approx_join, native_join, postjoin_sampling
 from repro.data import tpch
 
-SCALE = 0.005
+SCALE = scaled(0.005, 0.002)
 
 
 def run() -> list[dict]:

@@ -3,21 +3,26 @@ Netflix-like ratings join: latency, shuffled bytes, accuracy vs fraction."""
 
 from __future__ import annotations
 
-from benchmarks.common import row, timed
-from repro.core import (QueryBudget, approx_join, native_join,
+from benchmarks.common import row, scaled, timed
+from repro.core import (QueryBudget, approx_join,
                         postjoin_sampling)
 from repro.data import flows, netflix
+
+FLOW_SCALE = scaled(4096, 1024)
+NETFLIX_N = scaled(1 << 15, 1 << 12)
+NETFLIX_S = scaled(1 << 13, 1 << 10)
 
 
 def run() -> list[dict]:
     rows = []
     # network flows: 3-way join, filtering only
-    fr = flows.flow_tables(scale=4096, shared_fraction=0.03, seed=1)[::-1]
+    fr = flows.flow_tables(scale=FLOW_SCALE, shared_fraction=0.03,
+                           seed=1)[::-1]
     t_aj, res = timed(lambda: approx_join(fr, QueryBudget(),
-                                          max_strata=4096), repeats=2)
+                                          max_strata=FLOW_SCALE), repeats=2)
     # materializing comparator (the paper's native join pays the full
     # cross-product); sufficient-stats native_join hides that cost
-    t_nat, _ = timed(postjoin_sampling, fr, 1.0, max_strata=4096,
+    t_nat, _ = timed(postjoin_sampling, fr, 1.0, max_strata=FLOW_SCALE,
                      b_max=2048, repeats=2)
     d = res.diagnostics
     rows.append(row("fig13_network", approxjoin_s=round(t_aj, 4),
@@ -29,20 +34,20 @@ def run() -> list[dict]:
     for frac in (0.1, 0.5):
         _, approx = timed(lambda: approx_join(
             fr, QueryBudget(error=1.0, pilot_fraction=frac),
-            max_strata=4096, b_max=512, seed=3), repeats=2)
+            max_strata=FLOW_SCALE, b_max=512, seed=3), repeats=2)
         err = abs(float(approx.estimate) - exact) / abs(exact)
         rows.append(row("fig13_network", fraction=frac,
                         accuracy_loss=round(err, 6)))
     # netflix ratings join (latency only, as in the paper)
-    nr = netflix.ratings_tables(1 << 15, 1 << 12, seed=2)
+    nr = netflix.ratings_tables(NETFLIX_N, NETFLIX_N >> 3, seed=2)
     t_aj, res = timed(lambda: approx_join(nr, QueryBudget(),
-                                          max_strata=1 << 13), repeats=2)
-    t_nat, _ = timed(postjoin_sampling, nr, 1.0, max_strata=1 << 13,
+                                          max_strata=NETFLIX_S), repeats=2)
+    t_nat, _ = timed(postjoin_sampling, nr, 1.0, max_strata=NETFLIX_S,
                      b_max=2048, repeats=2)
     for frac in (0.1, 1.0):
         t_s, _ = timed(lambda: approx_join(
             nr, QueryBudget(error=1.0, pilot_fraction=frac),
-            max_strata=1 << 13, b_max=256, seed=4), repeats=2)
+            max_strata=NETFLIX_S, b_max=256, seed=4), repeats=2)
         rows.append(row("fig13_netflix", fraction=frac,
                         approxjoin_s=round(t_s, 4)))
     rows.append(row("fig13_netflix", exact_approxjoin_s=round(t_aj, 4),

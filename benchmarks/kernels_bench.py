@@ -6,14 +6,14 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import row, timed
+from benchmarks.common import row, scaled, timed
 from repro.core import bloom
 from repro.core.relation import relation, sort_by_key
 from repro.core.sampling import build_strata, sample_edges
 from repro.kernels import ops
 
-N = 1 << 15
-S, B_MAX = 1024, 512
+N = scaled(1 << 15, 1 << 12)
+S, B_MAX = scaled(1024, 512), scaled(512, 128)
 
 
 def run() -> list[dict]:

@@ -1,0 +1,87 @@
+"""JoinServer serving throughput: batched multi-tenant engine vs cold
+approx_join driver calls on the same query stream.
+
+Two capacity shape classes are interleaved (the worst case for batching);
+the engine must (a) batch same-class queries into fused dispatches and
+(b) show ZERO executable-cache compiles after the warmup phase — asserted
+here, which makes this bench the compiled-executable-reuse regression gate.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import row, scaled
+from repro.core.budget import QueryBudget
+from repro.core.cost import SigmaRegistry
+from repro.core.join import approx_join
+from repro.data.synthetic import overlapping_relations
+from repro.runtime.join_serve import JoinRequest, JoinServer
+
+N = scaled(1 << 13, 1 << 11)
+SLOTS = 4
+ROUNDS = scaled(3, 1)          # main-phase rounds of SLOTS queries per class
+MAX_STRATA = 2048
+B_MAX = 512
+
+
+def _workload(seed: int):
+    """Two shape classes (N and 2N rows), one tenant dataset each."""
+    return {
+        "small": overlapping_relations([N, N], 0.1, seed=seed),
+        "large": overlapping_relations([2 * N, 2 * N], 0.1, seed=seed + 1),
+    }
+
+
+def _request(tenant: str, rels, q: int) -> JoinRequest:
+    return JoinRequest(rels=rels, budget=QueryBudget(error=0.5),
+                       query_id=f"{tenant}/sum", seed=100 + q,
+                       max_strata=MAX_STRATA, b_max=B_MAX)
+
+
+def run() -> list[dict]:
+    datasets = _workload(seed=7)
+    queries = SLOTS * ROUNDS
+
+    # --- cold driver baseline: one approx_join per query, no reuse --------
+    reg = SigmaRegistry()
+    t0 = time.perf_counter()
+    for q in range(queries):
+        for tenant, rels in datasets.items():
+            approx_join(rels, QueryBudget(error=0.5), max_strata=MAX_STRATA,
+                        b_max=B_MAX, seed=100 + q, sigma_registry=reg,
+                        query_id=f"{tenant}/sum")
+    cold_s = time.perf_counter() - t0
+    cold_n = queries * len(datasets)
+
+    # --- server: warmup covers every (stage, class, batch) executable -----
+    server = JoinServer(batch_slots=SLOTS)
+    for q in range(SLOTS):
+        for tenant, rels in datasets.items():
+            server.submit(_request(tenant, rels, q))
+    server.run()
+    warm = server.diagnostics.snapshot()
+
+    for q in range(queries):
+        for tenant, rels in datasets.items():
+            server.submit(_request(tenant, rels, SLOTS + q))
+    t0 = time.perf_counter()
+    server.run()
+    serve_s = time.perf_counter() - t0
+    d = server.diagnostics
+    recompiles = d.compiles - warm["compiles"]
+    assert recompiles == 0, \
+        f"executable cache missed after warmup: {recompiles} recompiles"
+    assert d.max_batch == SLOTS, d.max_batch
+
+    served = d.queries - warm["queries"]
+    return [
+        row("serve", mode="cold", queries=cold_n, seconds=round(cold_s, 3),
+            qps=round(cold_n / cold_s, 2)),
+        row("serve", mode="server", queries=served,
+            seconds=round(serve_s, 3), qps=round(served / serve_s, 2),
+            compiles=d.compiles, recompiles_after_warmup=recompiles,
+            cache_hits=d.cache_hits, max_batch=d.max_batch),
+        row("serve", mode="speedup",
+            x=round((served / serve_s) / (cold_n / cold_s), 2)),
+    ]

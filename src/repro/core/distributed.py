@@ -63,15 +63,19 @@ class DistJoinResult(NamedTuple):
     sample_draws: jnp.ndarray
 
 
-def _axis_size(axes) -> str:
-    return axes if isinstance(axes, str) else axes
+def axis_size(a: str):
+    """Size of a mapped mesh axis.  ``jax.lax.axis_size`` only exists in
+    newer JAX; ``psum(1, axis)`` is the classic constant-folding idiom."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(a)
+    return jax.lax.psum(1, a)
 
 
 def combined_axis_index(axes: Sequence[str]) -> jnp.ndarray:
     """Linear device index over possibly-multiple mesh axes (major first)."""
     idx = jnp.zeros((), jnp.int32)
     for a in axes:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        idx = idx * axis_size(a) + jax.lax.axis_index(a)
     return idx
 
 
@@ -127,7 +131,7 @@ def shuffle_by_key(rel: Relation, k: int, cap: int, axes: Sequence[str],
     # each factor along ITS mesh axis — the composition is the all_to_all
     # over the combined (major-first) device index.  Exchanging always on
     # the leading dim would route the later axes by SOURCE index (bug).
-    sizes = [jax.lax.axis_size(a) for a in axes]
+    sizes = [axis_size(a) for a in axes]
     recv = []
     for x in (keys, vals, valid):
         x = x.reshape(*sizes, cap)

@@ -84,6 +84,97 @@ def filter_relations(rels: Sequence[Relation],
             for r in rels]
 
 
+# ---------------------------------------------------------------------------
+# Stage functions.  Each is a pure function of arrays + static config, so the
+# serving engine (runtime/join_serve.py) can jit(vmap(...)) them across a
+# batch of same-shape queries; approx_join below composes the same functions
+# eagerly, which keeps the two paths bit-identical by construction.
+# ---------------------------------------------------------------------------
+
+class PrepareOut(NamedTuple):
+    """Stages 1-3 output: live sorted relations + strata + row counts.
+
+    ``population`` duplicates ``strata.population`` as a plain array: the
+    Strata properties reduce over fixed axes, so they cannot be read off a
+    *batched* Strata pytree — the serving engine needs the per-example value
+    computed inside the vmapped stage.
+    """
+
+    sorted_rels: list[Relation]
+    strata: Strata
+    live_counts: jnp.ndarray   # int32 [n]
+    total_counts: jnp.ndarray  # int32 [n]
+    population: jnp.ndarray    # f32   [S]
+
+
+def prepare_stage(rels: Sequence[Relation], num_blocks: int, max_strata: int,
+                  seed) -> PrepareOut:
+    """Filter build/AND/probe, sort, group-by — one jit/vmap-friendly pass.
+
+    ``seed`` may be a traced array (per-query seeds batch under vmap), so the
+    filter AND happens on the packed words directly rather than through
+    :func:`bloom.intersect_all`, whose seed-equality assert cannot run on
+    tracers.  The arithmetic is identical.
+    """
+    filters = [bloom.build(r.keys, r.valid, num_blocks, seed) for r in rels]
+    words = filters[0].words
+    for f in filters[1:]:
+        words = words & f.words
+    join_filter = bloom.BloomFilter(words, seed)
+    live = filter_relations(rels, join_filter)
+    sorted_rels = [sort_by_key(r) for r in live]
+    strata = build_strata(sorted_rels, max_strata)
+    return PrepareOut(sorted_rels, strata,
+                      jnp.stack([r.count() for r in live]),
+                      jnp.stack([r.count() for r in rels]),
+                      strata.population)
+
+
+def exact_stage(sorted_rels: Sequence[Relation], strata: Strata, *,
+                agg: str, expr: str) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """§3.1.1 exact fast path: (estimate, count) from sufficient statistics."""
+    exact_fn = EXPRS[expr][1]
+    est = exact_fn(sorted_rels, strata)
+    cnt = exact_count(strata)
+    if agg == "count":
+        est = cnt
+    elif agg == "avg":
+        est = est / jnp.maximum(cnt, 1.0)
+    return est, cnt
+
+
+def estimate_stage(sample: SampleResult, *, agg: str, dedup: bool,
+                   confidence: float):
+    """§3.4: sufficient statistics -> (value, error bound, count, dof)."""
+    if dedup:
+        est = horvitz_thompson_sum(sample.stats, sample.unique_f,
+                                   sample.unique_count, confidence)
+    elif agg == "avg":
+        est = clt_avg(sample.stats, confidence)
+    elif agg == "stdev":
+        est = clt_stdev(sample.stats, confidence)
+    else:
+        est = clt_sum(sample.stats, confidence)
+    cnt = clt_count(sample.stats)
+    value = cnt if agg == "count" else est.estimate
+    err = jnp.zeros_like(est.error_bound) if agg == "count" \
+        else est.error_bound
+    return value, err, cnt, est.dof
+
+
+def sample_stage(sorted_rels: Sequence[Relation], strata: Strata,
+                 b_i: jnp.ndarray, b_max: int, seed, *,
+                 agg: str = "sum", dedup: bool = False,
+                 confidence: float = 0.95,
+                 f_fn: Callable = None):
+    """Stages 4-6 (sampled path): draw + aggregate + error bound."""
+    sample = sample_edges(sorted_rels, strata, b_i, b_max, seed,
+                          default_f if f_fn is None else f_fn)
+    value, err, cnt, dof = estimate_stage(sample, agg=agg, dedup=dedup,
+                                          confidence=confidence)
+    return value, err, cnt, dof, sample.stats
+
+
 def _pilot_sizes(population, fraction: float) -> jnp.ndarray:
     b = jnp.ceil(fraction * jnp.asarray(population, jnp.float32))
     return jnp.where(jnp.asarray(population) > 0, jnp.maximum(b, 1.0), 0.0)
@@ -142,8 +233,8 @@ def approx_join(rels: Sequence[Relation],
     """
     f_fn, exact_fn = EXPRS[expr] if f is None else (f, None)
     n = len(rels)
-    total_counts = jnp.stack([r.count() for r in rels])
     max_n = max(r.capacity for r in rels)
+    S = max_strata or rels[0].capacity
 
     # --- stage 1: filtering (timed: feeds d_dt in the latency cost fn) ---
     t0 = time.perf_counter()
@@ -159,12 +250,16 @@ def approx_join(rels: Sequence[Relation],
                                                      r.keys, seed,
                                                      interpret=interp))
                 for r in rels]
+        sorted_rels = [sort_by_key(r) for r in live]
+        kstrata = build_strata(sorted_rels, S)
+        prep = PrepareOut(sorted_rels, kstrata,
+                          jnp.stack([r.count() for r in live]),
+                          jnp.stack([r.count() for r in rels]),
+                          kstrata.population)
     else:
-        join_filter = build_join_filter(rels, num_blocks, seed)
-        live = filter_relations(rels, join_filter)
-    live_counts = jnp.stack([r.count() for r in live])
-    sorted_rels = [sort_by_key(r) for r in live]
-    strata = build_strata(sorted_rels, max_strata or rels[0].capacity)
+        prep = prepare_stage(rels, num_blocks, S, seed)
+    sorted_rels, strata = prep.sorted_rels, prep.strata
+    live_counts, total_counts = prep.live_counts, prep.total_counts
     jax.block_until_ready(strata.counts)
     d_filter = time.perf_counter() - t0
 
@@ -191,12 +286,7 @@ def approx_join(rels: Sequence[Relation],
         and budget.error is None)
     if exact_affordable:
         assert exact_fn is not None, "exact path needs a separable expr"
-        est = exact_fn(sorted_rels, strata)
-        cnt = exact_count(strata)
-        if agg == "count":
-            est = cnt
-        elif agg == "avg":
-            est = est / jnp.maximum(cnt, 1.0)
+        est, cnt = exact_stage(sorted_rels, strata, agg=agg, expr=expr)
         return JoinResult(est, jnp.zeros(()), cnt, jnp.zeros(()),
                           JoinDiagnostics(sample_draws=jnp.zeros(()),
                                           sampled=False, **diag),
@@ -227,18 +317,8 @@ def approx_join(rels: Sequence[Relation],
                               jnp.zeros((1, 1)), jnp.zeros((1, 1), bool))
     else:
         sample = sample_edges(sorted_rels, strata, b_i, b_max, seed + 1, f_fn)
-    if dedup:
-        est = horvitz_thompson_sum(sample.stats, sample.unique_f,
-                                   sample.unique_count, budget.confidence)
-    elif agg == "avg":
-        est = clt_avg(sample.stats, budget.confidence)
-    elif agg == "stdev":
-        est = clt_stdev(sample.stats, budget.confidence)
-    else:
-        est = clt_sum(sample.stats, budget.confidence)
-    cnt = clt_count(sample.stats)
-    value = cnt if agg == "count" else est.estimate
-    err = jnp.zeros(()) if agg == "count" else est.error_bound
+    value, err, cnt, dof = estimate_stage(sample, agg=agg, dedup=dedup,
+                                          confidence=budget.confidence)
 
     # --- feedback: store measured sigma for the next execution (§3.2-II) ---
     if sigma_registry is not None:
@@ -248,7 +328,7 @@ def approx_join(rels: Sequence[Relation],
                                        & (sample.stats.n_sampled > 1)))
         sigma_registry.update(query_id, keys, sig, ok)
 
-    return JoinResult(value, err, cnt, est.dof,
+    return JoinResult(value, err, cnt, dof,
                       JoinDiagnostics(
                           sample_draws=jnp.sum(sample.stats.n_sampled),
                           sampled=True, **diag),

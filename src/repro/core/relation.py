@@ -67,6 +67,21 @@ def pad_to(rel: Relation, capacity: int) -> Relation:
     )
 
 
+def bucket_capacity(n: int) -> int:
+    """Round a row count up to the next power of two (shape-class bucketing).
+
+    Serving batches queries whose relations share a capacity bucket, so the
+    compiled executable count is logarithmic in the capacity range rather
+    than linear in the number of distinct input sizes.
+    """
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def bucket_to_pow2(rel: Relation) -> Relation:
+    """Pad a relation with invalid rows up to its power-of-two bucket."""
+    return pad_to(rel, bucket_capacity(rel.capacity))
+
+
 def sort_by_key(rel: Relation) -> Relation:
     """Sort valid rows by key; invalid rows go last (stable)."""
     order = jnp.argsort(rel.masked_keys())

@@ -39,7 +39,6 @@ def overlapping_relations(sizes, overlap_fraction: float,
                           scramble: bool = True) -> list[Relation]:
     """n relations with the given overlap fraction and Poisson(lam) values."""
     rng = np.random.default_rng(seed)
-    n = len(sizes)
     shared_keys = rng.choice(_POOL_SPAN, size=max(
         int(keys_per_dataset * overlap_fraction), 1), replace=False)
     rels = []

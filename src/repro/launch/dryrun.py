@@ -30,14 +30,13 @@ import traceback
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.configs import ARCHS, SHAPES, applicable
 from repro.launch import roofline as RL
-from repro.launch.mesh import data_axes, make_production_mesh
+from repro.launch.mesh import make_production_mesh
 from repro.models import Model
 from repro.models.config import ArchConfig
-from repro.models.layers import COMPUTE_DTYPE
 from repro.models.model import CLIP_DIM
 from repro.runtime.train import TrainState, make_train_step
 from repro.sharding.axes import cache_axes, param_axes

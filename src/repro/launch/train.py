@@ -17,7 +17,6 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro.configs import ARCHS
 from repro.data.pipeline import lm_batch

@@ -11,7 +11,7 @@ O(depth) — the 64-layer dry-runs depend on this.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 

@@ -12,7 +12,7 @@ archs never materialize replicated logits; MoE aux loss folds in when present
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -127,7 +127,6 @@ def init_mamba_cache(cfg, batch: int) -> MambaCache:
 def mamba_decode(p, x, cfg, cache: MambaCache):
     """One-token step: x [B, 1, d_model] -> (y [B, 1, d_model], cache)."""
     s, d_inner, _ = _cfgdims(cfg)
-    B = x.shape[0]
     c = COMPUTE_DTYPE
     xz = x[:, 0] @ p["in_proj"].astype(c)
     x_in, z = jnp.split(xz, 2, axis=-1)                      # [B, d_inner]

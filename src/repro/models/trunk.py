@@ -13,7 +13,6 @@ the scan threads (params, cache) pairs and emits the updated cache.
 
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

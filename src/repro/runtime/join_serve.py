@@ -1,0 +1,370 @@
+"""Batched multi-tenant ApproxJoin serving engine.
+
+The LM ``Server`` (runtime/serve.py) batches token decodes across slots; the
+``JoinServer`` does the same for ApproxJoin queries.  A :class:`JoinRequest`
+carries relations (or a named dataset handle), a :class:`QueryBudget`, the
+aggregate/expression, and a tenant ``query_id``.  The engine:
+
+* **buckets** every relation to a power-of-two capacity
+  (:func:`repro.core.relation.bucket_to_pow2`) so queries fall into a small
+  number of *shape classes*;
+* keeps a **compiled-executable cache** keyed by
+  ``(stage, shape_class, batch)`` — repeat tenants never recompile;
+* **batches same-shape-class queries with vmap** across the
+  filter-build/probe/sort/strata and sample/estimate stages, so one engine
+  step is one fused device dispatch per stage regardless of how many tenants
+  share it;
+* shares one :class:`SigmaRegistry` and :class:`CostModel` across tenants, so
+  a repeated ``query_id`` gets the paper's §3.2-II adaptive sample sizing for
+  free — and tenants never see each other's sigmas (the registry is keyed by
+  ``query_id``).
+
+Results are bit-identical to a direct :func:`repro.core.join.approx_join`
+call on the same (bucketed) relations with the same seed: both paths compose
+the same stage functions from ``core/join.py``, and ``jit(vmap(stage))`` on
+this backend reproduces the eager per-example arithmetic exactly (asserted in
+``tests/test_join_serve.py``).
+
+Per-query dynamic decisions (exact-affordable?  per-stratum ``b_i`` from the
+budget + sigma feedback) stay on the host, exactly as in ``approx_join`` —
+the driver role.  Sigma feedback lands *between engine steps*: requests with
+the same ``query_id`` co-batched into one step all see the registry state at
+dispatch time, where a sequential driver would thread each execution's
+feedback into the next.  ``use_kernels`` queries are served through the Pallas path
+per-query (Pallas calls are not batched under vmap here); they still share
+the sigma registry and are tracked in the executable cache.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bloom
+from repro.core.budget import QueryBudget
+from repro.core.cost import CostModel, SigmaRegistry
+from repro.core.join import (EXPRS, TUPLE_BYTES, JoinDiagnostics, JoinResult,
+                             approx_join, decide_sample_sizes, exact_stage,
+                             measured_sigma, prepare_stage, sample_stage)
+from repro.core.relation import Relation, bucket_capacity, bucket_to_pow2
+
+DEFAULT_B_MAX = 2048
+AGGS = ("sum", "count", "avg", "stdev")
+
+
+class ShapeClass(NamedTuple):
+    """Static compilation signature of a query (the executable-cache key)."""
+
+    caps: tuple[int, ...]    # per-side bucketed capacities
+    n_inputs: int
+    max_strata: int
+    b_max: int
+    expr: str
+    agg: str
+    dedup: bool
+    use_kernels: bool
+    fp_rate: float
+    confidence: float
+
+
+@dataclass
+class JoinRequest:
+    """One tenant query: relations (or dataset handle) + budget + query id."""
+
+    rels: Optional[Sequence[Relation]] = None
+    dataset: Optional[str] = None
+    budget: QueryBudget = QueryBudget()
+    agg: str = "sum"
+    expr: str = "sum"
+    query_id: str = "q0"
+    seed: int = 0
+    fp_rate: float = 0.01
+    max_strata: Optional[int] = None
+    b_max: Optional[int] = DEFAULT_B_MAX
+    dedup: bool = False
+    use_kernels: bool = False
+    # filled by the server
+    result: Optional[JoinResult] = None
+    done: bool = False
+    queue_latency_s: float = 0.0
+    _class: Optional[ShapeClass] = field(default=None, repr=False)
+    _submit_t: float = field(default=0.0, repr=False)
+
+
+@dataclass
+class ServerDiagnostics:
+    """Server-level counters (cumulative since construction)."""
+
+    queries: int = 0
+    steps: int = 0
+    cache_hits: int = 0
+    compiles: int = 0               # executable-cache misses
+    exact_queries: int = 0
+    sampled_queries: int = 0
+    kernel_queries: int = 0
+    queue_latency_s: float = 0.0    # summed over finished queries
+    filter_s: float = 0.0           # summed batch filter-stage wall time
+    shuffled_bytes_saved: float = 0.0
+    max_batch: int = 0
+
+    def snapshot(self) -> dict:
+        return dict(vars(self))
+
+
+def shape_class_of(req: JoinRequest) -> ShapeClass:
+    caps = tuple(bucket_capacity(r.capacity) for r in req.rels)
+    return ShapeClass(caps, len(caps), req.max_strata, req.b_max,
+                      req.expr, req.agg, req.dedup, req.use_kernels,
+                      req.fp_rate, req.budget.confidence)
+
+
+def _make_prepare(num_blocks: int, max_strata: int):
+    def fn(rels, seed):
+        return prepare_stage(rels, num_blocks, max_strata, seed)
+    return jax.jit(jax.vmap(fn))
+
+
+def _make_sample(b_max: int, agg: str, dedup: bool, confidence: float,
+                 expr: str):
+    f_fn = EXPRS[expr][0]
+    def fn(sorted_rels, strata, b_i, seed):
+        return sample_stage(sorted_rels, strata, b_i, b_max, seed,
+                            agg=agg, dedup=dedup, confidence=confidence,
+                            f_fn=f_fn)
+    return jax.jit(jax.vmap(fn))
+
+
+def _make_exact(agg: str, expr: str):
+    def fn(sorted_rels, strata):
+        return exact_stage(sorted_rels, strata, agg=agg, expr=expr)
+    return jax.jit(jax.vmap(fn))
+
+
+class JoinServer:
+    """Slot-based batched ApproxJoin engine (the LM ``Server``, for joins)."""
+
+    def __init__(self, *, batch_slots: int = 4,
+                 cost_model: Optional[CostModel] = None,
+                 sigma_registry: Optional[SigmaRegistry] = None):
+        self.batch_slots = batch_slots
+        self.cost_model = cost_model
+        self.sigma = SigmaRegistry() if sigma_registry is None \
+            else sigma_registry
+        self.queue: list[JoinRequest] = []
+        self.datasets: dict[str, list[Relation]] = {}
+        self._exec_cache: dict = {}
+        self.diagnostics = ServerDiagnostics()
+
+    # -- admission ----------------------------------------------------------
+
+    def register_dataset(self, name: str, rels: Sequence[Relation]) -> None:
+        """Store a named (bucketed) dataset tenants can join by handle."""
+        self.datasets[name] = [bucket_to_pow2(r) for r in rels]
+
+    def submit(self, req: JoinRequest) -> JoinRequest:
+        if req.rels is None:
+            if req.dataset is None:
+                raise ValueError("JoinRequest needs rels or a dataset handle")
+            req.rels = self.datasets[req.dataset]
+        else:
+            req.rels = [bucket_to_pow2(r) for r in req.rels]
+        if len(req.rels) < 2:
+            raise ValueError("join needs at least two relations")
+        if req.expr not in EXPRS:
+            raise ValueError(f"unknown expr {req.expr!r}")
+        if req.agg not in AGGS:
+            raise ValueError(f"unknown agg {req.agg!r}")
+        if req.max_strata is None:
+            req.max_strata = req.rels[0].capacity
+        if req.b_max is None:
+            # approx_join's b_max=None adaptive grid sizes the draw capacity
+            # from data-dependent peak b_i — incompatible with a pre-keyed
+            # executable cache, so refuse rather than silently diverge.
+            raise ValueError("JoinServer needs a concrete b_max "
+                             f"(e.g. the default {DEFAULT_B_MAX}); the "
+                             "adaptive b_max=None grid is driver-side only")
+        req._class = shape_class_of(req)
+        req._submit_t = time.perf_counter()
+        self.queue.append(req)
+        return req
+
+    # -- executable cache ---------------------------------------------------
+
+    def _executable(self, stage: str, cls: ShapeClass, variant, builder):
+        """Fetch-or-build a compiled executable; ``variant`` is the rest of
+        the cache key (batch bucket for vmapped stages, seed for the
+        static-seed kernel route).  Returns (fn, freshly_built)."""
+        key = (stage, cls, variant)
+        fn = self._exec_cache.get(key)
+        fresh = fn is None
+        if fresh:
+            fn = builder()
+            self._exec_cache[key] = fn
+            self.diagnostics.compiles += 1
+        else:
+            self.diagnostics.cache_hits += 1
+        return fn, fresh
+
+    # -- engine -------------------------------------------------------------
+
+    def step(self) -> int:
+        """Serve one batch of same-shape-class queries; returns batch size."""
+        if not self.queue:
+            return 0
+        cls = self.queue[0]._class
+        batch = [r for r in self.queue if r._class == cls][:self.batch_slots]
+        taken = set(map(id, batch))
+        self.queue = [r for r in self.queue if id(r) not in taken]
+        self.diagnostics.steps += 1
+        self.diagnostics.max_batch = max(self.diagnostics.max_batch,
+                                         len(batch))
+        if cls.use_kernels:
+            for req in batch:
+                self._run_kernel(cls, req)
+        else:
+            self._run_batch(cls, batch)
+        for req in batch:
+            req.done = True
+            req.queue_latency_s = time.perf_counter() - req._submit_t
+            self.diagnostics.queue_latency_s += req.queue_latency_s
+            self.diagnostics.queries += 1
+            d = req.result.diagnostics
+            self.diagnostics.shuffled_bytes_saved += float(
+                d.shuffled_bytes_repartition - d.shuffled_bytes_filtered)
+        return len(batch)
+
+    def run(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if self.step() == 0:
+                break
+
+    # -- execution paths ----------------------------------------------------
+
+    def _run_kernel(self, cls: ShapeClass, req: JoinRequest) -> None:
+        # Pallas route: per-query execution through approx_join.  The kernel
+        # wrappers are jitted with STATIC seeds, so XLA compiles per distinct
+        # seed — keying the cache entry on the seed keeps the compile/hit
+        # counters honest about that.
+        self._executable("kernel", cls, req.seed, lambda: approx_join)
+        req.result = approx_join(
+            req.rels, req.budget, agg=req.agg, expr=req.expr, seed=req.seed,
+            fp_rate=req.fp_rate, max_strata=cls.max_strata, b_max=cls.b_max,
+            cost_model=self.cost_model, sigma_registry=self.sigma,
+            query_id=req.query_id, dedup=req.dedup, use_kernels=True)
+        self.diagnostics.kernel_queries += 1
+        if req.result.diagnostics.sampled:
+            self.diagnostics.sampled_queries += 1
+        else:
+            self.diagnostics.exact_queries += 1
+
+    def _run_batch(self, cls: ShapeClass, batch: list[JoinRequest]) -> None:
+        B = bucket_capacity(len(batch))                # pow2 batch bucket
+        reqs = batch + [batch[-1]] * (B - len(batch))  # pad slots (discarded)
+        rels_b = [Relation(jnp.stack([r.rels[s].keys for r in reqs]),
+                           jnp.stack([r.rels[s].values for r in reqs]),
+                           jnp.stack([r.rels[s].valid for r in reqs]))
+                  for s in range(cls.n_inputs)]
+        seeds = jnp.asarray([r.seed for r in reqs], jnp.uint32)
+        num_blocks = bloom.num_blocks_for(max(cls.caps), cls.fp_rate)
+
+        prepare, fresh = self._executable(
+            "prepare", cls, B, partial(_make_prepare, num_blocks,
+                                       cls.max_strata))
+        if fresh:
+            # warm the executable off the clock: d_filter feeds the latency
+            # cost function (§3.2), which models repeated query execution —
+            # charging one-off trace+compile seconds would zero out every
+            # latency budget on the first batch of a shape class.
+            jax.block_until_ready(prepare(rels_b, seeds).strata.counts)
+        t0 = time.perf_counter()
+        prep = prepare(rels_b, seeds)
+        jax.block_until_ready(prep.strata.counts)
+        d_filter = time.perf_counter() - t0
+        self.diagnostics.filter_s += d_filter
+
+        population = np.asarray(jax.device_get(prep.population))
+        skeys = np.asarray(jax.device_get(prep.strata.keys))
+
+        def slice_i(i):
+            return jax.tree_util.tree_map(lambda x: x[i], prep.strata)
+
+        # -- host decisions: exact-affordable? b_i from budget + sigma ------
+        sampled_idx, b_rows = [], []
+        zeros_b = jnp.zeros((cls.max_strata,), jnp.float32)
+        for i, req in enumerate(batch):
+            budget, total_pop = req.budget, float(population[i].sum())
+            exact_ok = budget.is_exact or (
+                budget.latency_s is not None and self.cost_model is not None
+                and float(self.cost_model.beta_compute) * total_pop
+                + self.cost_model.epsilon + d_filter <= budget.latency_s
+                and budget.error is None)
+            if exact_ok:
+                b_rows.append(zeros_b)
+                continue
+            sigma = None
+            if budget.error is not None and self.sigma.has(req.query_id):
+                sigma = self.sigma.lookup(req.query_id, skeys[i])
+            b_rows.append(decide_sample_sizes(
+                budget, slice_i(i), self.cost_model, d_filter, sigma,
+                budget.confidence))
+            sampled_idx.append(i)
+        exact_idx = [i for i in range(len(batch)) if i not in sampled_idx]
+        b_rows += [zeros_b] * (B - len(batch))
+
+        # -- fused device dispatches (per stage, whole batch) ---------------
+        value = err = cnt = dof = stats = None
+        if sampled_idx:
+            sample, _ = self._executable(
+                "sample", cls, B, partial(_make_sample, cls.b_max, cls.agg,
+                                          cls.dedup, cls.confidence, cls.expr))
+            value, err, cnt, dof, stats = sample(
+                prep.sorted_rels, prep.strata, jnp.stack(b_rows),
+                seeds + jnp.uint32(1))
+        if exact_idx:
+            exact, _ = self._executable(
+                "exact", cls, B, partial(_make_exact, cls.agg, cls.expr))
+            e_est, e_cnt = exact(prep.sorted_rels, prep.strata)
+
+        # -- per-query results + sigma feedback -----------------------------
+        fbytes = num_blocks * bloom.WORDS_PER_BLOCK * 4
+        n = cls.n_inputs
+        for i, req in enumerate(batch):
+            strata_i = slice_i(i)
+            live_i, tot_i = prep.live_counts[i], prep.total_counts[i]
+            diag = dict(
+                total_counts=tot_i, live_counts=live_i,
+                overlap_fraction=jnp.sum(live_i)
+                / jnp.maximum(jnp.sum(tot_i), 1),
+                filter_bytes=fbytes,
+                shuffled_bytes_filtered=jnp.sum(live_i) * TUPLE_BYTES
+                + fbytes * (n + 1),
+                shuffled_bytes_repartition=jnp.sum(tot_i) * TUPLE_BYTES,
+                num_strata=strata_i.num_strata,
+                strata_overflow=strata_i.overflow,
+                total_population=jnp.sum(strata_i.population),
+                d_filter_s=d_filter)
+            if i in exact_idx:
+                req.result = JoinResult(
+                    e_est[i], jnp.zeros(()), e_cnt[i], jnp.zeros(()),
+                    JoinDiagnostics(sample_draws=jnp.zeros(()), sampled=False,
+                                    **diag),
+                    strata=strata_i)
+                self.diagnostics.exact_queries += 1
+                continue
+            stats_i = jax.tree_util.tree_map(lambda x: x[i], stats)
+            req.result = JoinResult(
+                value[i], err[i], cnt[i], dof[i],
+                JoinDiagnostics(sample_draws=jnp.sum(stats_i.n_sampled),
+                                sampled=True, **diag),
+                stats=stats_i, strata=strata_i)
+            sig = np.asarray(jax.device_get(measured_sigma(stats_i)))
+            ok = np.asarray(jax.device_get(
+                stats_i.valid & (stats_i.n_sampled > 1)))
+            self.sigma.update(req.query_id, skeys[i], sig, ok)
+            self.diagnostics.sampled_queries += 1

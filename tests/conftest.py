@@ -8,6 +8,35 @@ import pytest
 from repro.core.relation import relation
 
 
+def hypothesis_or_stubs():
+    """(given, settings, strategies) — real, or skip-stubs when hypothesis
+    is absent.  The tier-1 suite must degrade to *skips*, not collection
+    errors, when the dev extra isn't installed; deterministic tests in the
+    same module keep running."""
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies
+        return given, settings, strategies
+    except ModuleNotFoundError:
+        def settings(**kw):
+            return lambda fn: fn
+
+        def given(*a, **k):
+            def deco(fn):
+                @pytest.mark.skip(reason="hypothesis not installed")
+                def stub():
+                    pytest.importorskip("hypothesis")
+                stub.__name__ = fn.__name__
+                return stub
+            return deco
+
+        class _Strategies:
+            def __getattr__(self, name):
+                return lambda *a, **k: None
+
+        return given, settings, _Strategies()
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

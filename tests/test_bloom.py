@@ -3,11 +3,11 @@ filter algebra (Alg. 1), Appendix-B size models."""
 
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
+from conftest import hypothesis_or_stubs
 from repro.core import bloom
+
+given, settings, st = hypothesis_or_stubs()
 
 U32 = st.integers(min_value=0, max_value=2**32 - 2)
 

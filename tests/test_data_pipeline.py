@@ -2,7 +2,6 @@
 ordering (Fig. 1 property)."""
 
 import numpy as np
-import pytest
 
 from repro.core import (QueryBudget, accuracy_loss, approx_join, native_join,
                         postjoin_sampling, prejoin_sampling)

@@ -3,14 +3,13 @@ unbiasedness, distributed-merge equivalence."""
 
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
-
+from conftest import hypothesis_or_stubs
 from repro.core.estimators import (StratumStats, clt_count, clt_finish,
                                    clt_sum, clt_sum_parts,
                                    horvitz_thompson_sum,
                                    inclusion_probability, t_quantile)
+
+given, settings, st = hypothesis_or_stubs()
 
 # two-sided 97.5% t quantiles (scipy.stats.t.ppf(0.975, df))
 _T975 = {5: 2.5706, 10: 2.2281, 30: 2.0423, 100: 1.9840, 1000: 1.9623}

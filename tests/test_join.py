@@ -142,9 +142,9 @@ def test_sigma_feedback_improves_second_run(rng, tmp_path):
     sample size rather than the pilot fraction."""
     r1, r2 = make_pair(rng)
     reg = SigmaRegistry()
-    b1 = approx_join([r1, r2], QueryBudget(error=2.0, pilot_fraction=0.02),
-                     max_strata=1024, b_max=512, sigma_registry=reg,
-                     query_id="q1", seed=7)
+    approx_join([r1, r2], QueryBudget(error=2.0, pilot_fraction=0.02),
+                max_strata=1024, b_max=512, sigma_registry=reg,
+                query_id="q1", seed=7)
     assert reg.has("q1")
     b2 = approx_join([r1, r2], QueryBudget(error=2.0),
                      max_strata=1024, b_max=512, sigma_registry=reg,

@@ -1,0 +1,175 @@
+"""JoinServer serving path: bit-identity with direct approx_join, executable
+cache behaviour, tenant isolation of the sigma feedback, shape classes."""
+
+import numpy as np
+import pytest
+
+from conftest import make_pair
+from repro.core.budget import QueryBudget
+from repro.core.cost import SigmaRegistry
+from repro.core.join import approx_join
+from repro.core.relation import bucket_capacity, bucket_to_pow2, relation
+from repro.runtime.join_serve import JoinRequest, JoinServer, shape_class_of
+
+MS, BM = 1024, 512   # max_strata / b_max used throughout
+
+
+def _identical(a, b):
+    """Bitwise equality of the user-facing result surface."""
+    return (float(a.estimate) == float(b.estimate)
+            and float(a.error_bound) == float(b.error_bound)
+            and float(a.count) == float(b.count)
+            and float(a.dof) == float(b.dof))
+
+
+def _req(rels, budget, qid, seed):
+    return JoinRequest(rels=rels, budget=budget, query_id=qid, seed=seed,
+                       max_strata=MS, b_max=BM)
+
+
+def test_single_query_bit_identical_to_direct(rng):
+    r1, r2 = make_pair(rng, n=1 << 12)      # pow2: bucketing is a no-op
+    srv = JoinServer(batch_slots=4)
+    q = srv.submit(_req([r1, r2], QueryBudget(error=0.5), "t0", seed=5))
+    srv.run()
+    direct = approx_join([r1, r2], QueryBudget(error=0.5), max_strata=MS,
+                         b_max=BM, seed=5)
+    assert q.done and _identical(q.result, direct)
+    assert bool(q.result.diagnostics.sampled)
+    # live/total counts and population survive the batched path bit-exactly
+    np.testing.assert_array_equal(
+        np.asarray(q.result.diagnostics.live_counts),
+        np.asarray(direct.diagnostics.live_counts))
+    np.testing.assert_array_equal(np.asarray(q.result.strata.keys),
+                                  np.asarray(direct.strata.keys))
+
+
+def test_batched_mixed_budgets_bit_identical(rng):
+    """One engine step serves a mixed exact/sampled batch; every slot is
+    bit-identical to its own direct approx_join call."""
+    pairs = [make_pair(rng, n=1 << 12),
+             make_pair(rng, n=1 << 12, keys2=(450, 950)),
+             make_pair(rng, n=1 << 12, mu1=3.0)]
+    budgets = [QueryBudget(error=0.5), QueryBudget(error=0.5), QueryBudget()]
+    srv = JoinServer(batch_slots=4)
+    qs = [srv.submit(_req(list(p), b, f"t{i}", seed=10 + i))
+          for i, (p, b) in enumerate(zip(pairs, budgets))]
+    assert srv.step() == 3                   # one batch, same shape class
+    for i, (p, b) in enumerate(zip(pairs, budgets)):
+        direct = approx_join(list(p), b, max_strata=MS, b_max=BM,
+                             seed=10 + i)
+        assert _identical(qs[i].result, direct), i
+    assert not bool(qs[2].result.diagnostics.sampled)  # exact budget
+
+
+def test_cache_hits_increase_on_repeat_shape_class(rng):
+    r1, r2 = make_pair(rng, n=1 << 11)
+    srv = JoinServer(batch_slots=2)
+    srv.submit(_req([r1, r2], QueryBudget(error=0.5), "a", seed=1))
+    srv.run()
+    first = srv.diagnostics.snapshot()
+    assert first["compiles"] >= 2 and first["cache_hits"] == 0
+    srv.submit(_req([r1, r2], QueryBudget(error=0.5), "a", seed=2))
+    srv.run()
+    second = srv.diagnostics.snapshot()
+    assert second["compiles"] == first["compiles"]     # zero recompiles
+    assert second["cache_hits"] > first["cache_hits"]
+    # a new shape class compiles fresh executables
+    r3, r4 = make_pair(rng, n=1 << 12)
+    srv.submit(_req([r3, r4], QueryBudget(error=0.5), "a", seed=3))
+    srv.run()
+    assert srv.diagnostics.compiles > second["compiles"]
+
+
+def test_interleaved_tenants_do_not_cross_contaminate_sigma(rng):
+    """Tenant A and B interleave in the queue; each query_id's sigma table
+    matches the one a dedicated per-tenant driver would have produced."""
+    ra = make_pair(rng, n=1 << 12)
+    rb = make_pair(rng, n=1 << 12, keys2=(300, 800), mu1=20.0)
+    srv = JoinServer(batch_slots=2)
+    for q in range(2):
+        srv.submit(_req(list(ra), QueryBudget(error=0.5), "tenantA", q))
+        srv.submit(_req(list(rb), QueryBudget(error=0.5), "tenantB", q))
+    srv.run()
+    assert set(srv.sigma.table) == {"tenantA", "tenantB"}
+
+    for qid, rels in (("tenantA", ra), ("tenantB", rb)):
+        reg = SigmaRegistry()
+        for q in range(2):
+            approx_join(list(rels), QueryBudget(error=0.5), max_strata=MS,
+                        b_max=BM, seed=q, sigma_registry=reg, query_id=qid)
+        assert srv.sigma.table[qid] == reg.table[qid], qid
+
+
+def test_two_shape_classes_concurrently(rng):
+    """Queries from two capacity shape classes interleave; the engine groups
+    them into per-class batches and each result stays bit-identical.
+
+    Each query gets a unique query_id: same-id queries co-batched into one
+    step legitimately diverge from a *sequential* direct driver, because
+    sigma feedback lands between steps, not between slots of one step.
+    """
+    small = make_pair(rng, n=1 << 11)
+    large = make_pair(rng, n=1 << 12)
+    srv = JoinServer(batch_slots=4)
+    qs = []
+    for q in range(2):
+        qs.append((small, srv.submit(
+            _req(list(small), QueryBudget(error=0.5), f"s{q}", seed=q))))
+        qs.append((large, srv.submit(
+            _req(list(large), QueryBudget(error=0.5), f"l{q}", seed=q))))
+    srv.run()
+    classes = {shape_class_of(r) for _, r in qs}
+    assert len(classes) == 2
+    for rels, req in qs:
+        direct = approx_join(list(rels), QueryBudget(error=0.5),
+                             max_strata=MS, b_max=BM, seed=req.seed)
+        assert _identical(req.result, direct)
+    assert srv.diagnostics.steps <= 4        # batched, not one step/query
+
+
+def test_nonpow2_input_bucketed_like_direct_padded_call(rng):
+    """Non-pow2 capacities are padded to their bucket; the result equals a
+    direct approx_join on the explicitly bucketed relations."""
+    n = 3000                                  # buckets to 4096
+    r1 = relation(rng.integers(0, 500, n).astype(np.uint32),
+                  rng.normal(10, 2, n).astype(np.float32))
+    r2 = relation(rng.integers(400, 900, n).astype(np.uint32),
+                  rng.normal(5, 1, n).astype(np.float32))
+    assert bucket_capacity(n) == 4096
+    srv = JoinServer(batch_slots=2)
+    q = srv.submit(_req([r1, r2], QueryBudget(error=0.5), "t", seed=3))
+    srv.run()
+    direct = approx_join([bucket_to_pow2(r1), bucket_to_pow2(r2)],
+                         QueryBudget(error=0.5), max_strata=MS, b_max=BM,
+                         seed=3)
+    assert _identical(q.result, direct)
+
+
+def test_dataset_handles_and_validation(rng):
+    r1, r2 = make_pair(rng, n=1 << 11)
+    srv = JoinServer(batch_slots=2)
+    srv.register_dataset("shared", [r1, r2])
+    q = srv.submit(JoinRequest(dataset="shared", budget=QueryBudget(),
+                               query_id="t", max_strata=MS, b_max=BM))
+    srv.run()
+    direct = approx_join([r1, r2], QueryBudget(), max_strata=MS, b_max=BM)
+    assert _identical(q.result, direct)
+    assert q.queue_latency_s > 0
+    with pytest.raises(ValueError):
+        srv.submit(JoinRequest(budget=QueryBudget()))        # no rels
+    with pytest.raises(ValueError):
+        srv.submit(JoinRequest(rels=[r1, r2], agg="median"))  # unknown agg
+
+
+def test_kernel_route_served_per_query(rng):
+    r1, r2 = make_pair(rng, n=1 << 11)
+    srv = JoinServer(batch_slots=2)
+    q = srv.submit(JoinRequest(rels=[r1, r2], budget=QueryBudget(error=0.5),
+                               query_id="t", seed=3, max_strata=512,
+                               b_max=256, use_kernels=True))
+    srv.run()
+    direct = approx_join([r1, r2], QueryBudget(error=0.5), max_strata=512,
+                         b_max=256, seed=3, use_kernels=True)
+    assert _identical(q.result, direct)
+    assert srv.diagnostics.kernel_queries == 1

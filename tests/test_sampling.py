@@ -3,13 +3,14 @@ draws, exact sufficient-statistics oracles (hypothesis property tests)."""
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
+from conftest import hypothesis_or_stubs
 from repro.core.relation import relation, sort_by_key
 from repro.core.sampling import (build_strata, exact_count,
                                  exact_sum_of_products, exact_sum_of_sums,
                                  sample_edges)
+
+given, settings, st = hypothesis_or_stubs()
 
 KEYS = st.lists(st.integers(0, 30), min_size=1, max_size=120)
 

@@ -3,8 +3,6 @@ trees for parameters and caches (single-device safe — no mesh needed beyond
 a trivial one)."""
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
