@@ -5,10 +5,23 @@ Two capacity shape classes are interleaved (the worst case for batching);
 the engine must (a) batch same-class queries into fused dispatches and
 (b) show ZERO executable-cache compiles after the warmup phase — asserted
 here, which makes this bench the compiled-executable-reuse regression gate.
+
+``--distributed`` additionally serves the same workload through the mesh
+pipeline at 1/2/4/8 host-platform devices, reporting q/s, measured
+per-device shuffled bytes, and the per-dataset Bloom-filter-reuse counter
+(one build per registered relation across the whole multi-step run —
+asserted).  Re-execs itself under
+``--xla_force_host_platform_device_count=8`` when needed:
+
+  PYTHONPATH=src python -m benchmarks.serve_bench --distributed
 """
 
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
 
 from benchmarks.common import row, scaled
@@ -23,6 +36,7 @@ SLOTS = 4
 ROUNDS = scaled(3, 1)          # main-phase rounds of SLOTS queries per class
 MAX_STRATA = 2048
 B_MAX = 512
+MESH_SIZES = (1, 2, 4, 8)
 
 
 def _workload(seed: int):
@@ -85,3 +99,94 @@ def run() -> list[dict]:
         row("serve", mode="speedup",
             x=round((served / serve_s) / (cold_n / cold_s), 2)),
     ]
+
+
+def _run_distributed_leg(devices: int) -> dict:
+    """Serve one dataset-handle workload on a ``devices``-wide mesh."""
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    mesh = Mesh(np.array(jax.devices()[:devices]), ("data",))
+    server = JoinServer(batch_slots=SLOTS, mesh=mesh)
+    for tenant, rels in _workload(seed=7).items():
+        server.register_dataset(tenant, rels)
+
+    def submit(tenant, q):
+        # one seed for the whole run: the per-dataset filter words must be
+        # built once per relation and reused every subsequent step
+        server.submit(JoinRequest(dataset=tenant,
+                                  budget=QueryBudget(error=0.5),
+                                  query_id=f"{tenant}/sum", seed=100 + q,
+                                  max_strata=MAX_STRATA, b_max=B_MAX))
+
+    for q in range(SLOTS):               # warmup: compile every executable
+        for tenant in ("small", "large"):
+            submit(tenant, 0)
+    server.run()
+    warm = server.diagnostics.snapshot()
+
+    queries = SLOTS * ROUNDS
+    for q in range(queries):
+        for tenant in ("small", "large"):
+            submit(tenant, 0)
+    t0 = time.perf_counter()
+    server.run()
+    dt = time.perf_counter() - t0
+    d = server.diagnostics
+    recompiles = d.compiles - warm["compiles"]
+    assert recompiles == 0, \
+        f"mesh[{devices}] recompiled after warmup: {recompiles}"
+    # Bloom-filter reuse: one build per registered relation (2 datasets x 2
+    # relations at seed 100) across the whole multi-step run
+    assert d.filter_builds == 4, d.filter_builds
+    assert d.filter_cache_hits > 0
+    served = d.queries - warm["queries"]
+    return row("serve", mode=f"mesh{devices}", queries=served,
+               seconds=round(dt, 3), qps=round(served / dt, 2),
+               recompiles_after_warmup=recompiles,
+               filter_builds=d.filter_builds,
+               filter_cache_hits=d.filter_cache_hits,
+               shuffled_bytes_total=round(d.dist_shuffled_tuple_bytes),
+               per_device_shuffled_bytes=[
+                   int(round(float(b))) for b in d.per_device_shuffled_bytes])
+
+
+def run_distributed() -> list[dict]:
+    """q/s + per-device shuffled bytes at 1/2/4/8 host-platform devices.
+
+    Spawns a child with ``--xla_force_host_platform_device_count=8`` when
+    this process has fewer devices (the flag must precede jax init); the
+    child emits one JSON row per mesh size on stdout.
+    """
+    import jax
+    if jax.device_count() < max(MESH_SIZES):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " "
+                            "--xla_force_host_platform_device_count="
+                            f"{max(MESH_SIZES)}").strip()
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        out = subprocess.run(
+            [sys.executable, "-m", "benchmarks.serve_bench",
+             "--distributed-child"],
+            env=env, capture_output=True, text=True, timeout=3600)
+        assert out.returncode == 0, out.stderr[-3000:]
+        return [json.loads(line) for line in out.stdout.splitlines()
+                if line.startswith("{")]
+    return [_run_distributed_leg(devices) for devices in MESH_SIZES]
+
+
+def main() -> None:
+    from benchmarks.common import print_rows
+    if "--distributed-child" in sys.argv:
+        for r in [_run_distributed_leg(d) for d in MESH_SIZES]:
+            print(json.dumps(r), flush=True)
+        return
+    rows = run()
+    if "--distributed" in sys.argv:
+        rows += run_distributed()
+    print_rows(rows)
+
+
+if __name__ == "__main__":
+    main()

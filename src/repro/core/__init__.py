@@ -18,7 +18,9 @@ from repro.core.baselines import (BaselineResult, broadcast_join, native_join,
                                   volume_broadcast, volume_repartition)
 from repro.core.budget import QueryBudget, parse_budget
 from repro.core.cost import CostModel, SigmaRegistry, calibrate_beta
-from repro.core.distributed import (DistJoinResult, distributed_approx_join,
+from repro.core.distributed import (DistJoinResult, dist_exact_stage,
+                                    dist_prepare_stage, dist_sample_stage,
+                                    distributed_approx_join,
                                     make_distributed_join)
 from repro.core.estimators import (Estimate, StratumStats, accuracy_loss,
                                    clt_avg, clt_count, clt_sum,

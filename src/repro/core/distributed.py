@@ -13,12 +13,30 @@ This is the paper's Spark dataflow (Fig. 7) mapped onto SPMD collectives
   probe + discard            filter() on workers         local probe -> mask
   cogroup shuffle            hash shuffle                bucketize + all_to_all
   sampleDuringJoin           per-key edge sampling       vectorized sampler
-  merge partial results      collect at driver           psum of SumParts
+  merge partial results      collect at driver           gather + key-sort, or
+                                                         psum of SumParts
 
-Because the shuffle routes every key to exactly one device, strata are
-device-complete afterwards and the per-device estimator parts ADD — the merge
-is a single psum.  The sampler keys its PRNG on the join key, so the sampled
-edges are identical no matter how many devices participated (tested).
+The pipeline is factored into per-stage functions mirroring
+``core/join.py``'s ``prepare/exact/sample/estimate`` split, so the serving
+engine (``runtime/join_serve.py``) can cache per-stage executables for the
+distributed path exactly as it does for the single-device path.
+
+Two merge strategies:
+
+* ``merge='gather'`` (default): per-device strata/stats are all_gathered,
+  key-sorted into the canonical single-device ``[S]`` slot layout, and
+  finished with the *same* arithmetic as ``core/join.py`` — results are
+  **bit-identical** to the single-device pipeline at any mesh size (the
+  shuffle routes every key to exactly one device, the received rows arrive in
+  source-major = original-row order, and the sampler keys its PRNG on the
+  join key, so every per-stratum quantity is reproduced exactly; asserted in
+  ``tests/test_join_serve_distributed.py``).
+
+* ``merge='psum'``: the paper's dataflow — per-device estimator parts ADD
+  across devices (strata are device-complete after the shuffle) and the merge
+  is a single psum.  Cheapest collectives (used by the cluster-scale
+  roofline dry-runs); results agree with single-device up to float
+  reassociation.
 
 Everything is static-shape: the shuffle uses capacity-bounded buckets
 (overflow is counted and surfaced — the feedback path for elastic re-runs).
@@ -37,12 +55,15 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core import bloom
 from repro.core.budget import QueryBudget
 from repro.core.cost import CostModel, fraction_for_latency
-from repro.core.estimators import SumParts, clt_finish, clt_sum_parts
+from repro.core.estimators import (StratumStats, clt_finish, clt_sum_parts,
+                                   SumParts)
 from repro.core.hashing import hash2, u32
-from repro.core.join import EXPRS, TUPLE_BYTES
+from repro.core.join import (EXPRS, TUPLE_BYTES, estimate_stage,
+                             exact_stage_from_sums, _pilot_sizes)
 from repro.core.relation import Relation, sort_by_key
-from repro.core.sampling import (build_strata, exact_count,
-                                 exact_sum_of_products, exact_sum_of_sums,
+from repro.core.sampling import (SENTINEL, SampleResult, Strata, build_strata,
+                                 exact_count, exact_sum_of_products,
+                                 exact_sum_of_sums, per_stratum_value_sums,
                                  sample_edges)
 
 
@@ -61,6 +82,7 @@ class DistJoinResult(NamedTuple):
     strata_overflow: jnp.ndarray
     total_population: jnp.ndarray
     sample_draws: jnp.ndarray
+    device_shuffled_bytes: jnp.ndarray  # [k] per-device sent-tuple bytes
 
 
 def axis_size(a: str):
@@ -122,7 +144,14 @@ def bucketize(rel: Relation, dest: jnp.ndarray, k: int, cap: int):
 
 def shuffle_by_key(rel: Relation, k: int, cap: int, axes: Sequence[str],
                    seed: int):
-    """Hash-partition a sharded relation so each key lands on one device."""
+    """Hash-partition a sharded relation so each key lands on one device.
+
+    The received buffer is source-major and bucketize keeps original row
+    order within a bucket, so for any key the received rows arrive in
+    ascending original-global-row order — a stable local sort by key then
+    reproduces the single-device sorted segment content exactly (the
+    bit-parity invariant the gather merge relies on).
+    """
     dest = (hash2(rel.keys, seed) % u32(k)).astype(jnp.int32)
     me = combined_axis_index(axes)
     sent = rel.valid & (dest != me)
@@ -142,6 +171,227 @@ def shuffle_by_key(rel: Relation, k: int, cap: int, axes: Sequence[str],
     out = Relation(recv[0].reshape(-1), recv[1].reshape(-1),
                    recv[2].reshape(-1))
     return out, jnp.sum(sent.astype(jnp.int32)), overflow
+
+
+# ---------------------------------------------------------------------------
+# Gather merge: rebuild the canonical single-device [S] slot layout from the
+# per-device strata.  Every key lives on exactly one device after the
+# shuffle, so sorting the gathered slots by key and truncating to S yields
+# the same keys, in the same order, as a single-device build_strata — and
+# any per-stratum quantity computed on the owning device drops into the
+# same slot it would occupy on a single device.
+# ---------------------------------------------------------------------------
+
+def gather_concat(x: jnp.ndarray, axes: Sequence[str]) -> jnp.ndarray:
+    """all_gather over possibly-multiple axes, concatenated on dim 0."""
+    for a in reversed(list(axes)):
+        x = jax.lax.all_gather(x, a, tiled=True)
+    return x
+
+
+def merge_by_key(local_keys: jnp.ndarray, fields: Sequence[jnp.ndarray],
+                 axes: Sequence[str], max_strata: int):
+    """Key-sort per-device [S]-leading slot arrays into canonical [S] slots.
+
+    Returns ``(keys [S], merged_fields)``.  Slots beyond ``max_strata``
+    (largest keys — the same drop rule as ``build_strata``) are truncated.
+    """
+    gk = gather_concat(local_keys, axes)          # [k*S]
+    order = jnp.argsort(gk)                       # stable; SENTINEL slots last
+    keys = gk[order][:max_strata]
+    merged = [gather_concat(f, axes)[order][:max_strata] for f in fields]
+    return keys, merged
+
+
+def merge_strata(local: Strata, axes: Sequence[str], max_strata: int) -> Strata:
+    """Merged replicated Strata in the canonical single-device layout.
+
+    ``starts`` are zeroed — they index per-device sorted arrays and have no
+    global meaning; everything downstream of the merge (host-side sample
+    sizing, exact finish, estimators) only needs keys/valid/counts.
+    """
+    S = max_strata
+    n_sides = local.counts.shape[0]
+    total = jax.lax.psum(jnp.sum(local.valid.astype(jnp.int32))
+                         + local.overflow, tuple(axes))
+    keys, counts = merge_by_key(local.keys,
+                                [local.counts[i] for i in range(n_sides)],
+                                axes, S)
+    valid = jnp.arange(S) < jnp.minimum(total, S)
+    keys = jnp.where(valid, keys, u32(SENTINEL))
+    counts = jnp.stack([jnp.where(valid, c, 0) for c in counts])
+    return Strata(keys, valid, jnp.zeros_like(counts), counts,
+                  jnp.maximum(total - S, 0))
+
+
+def merged_to_local(merged_keys: jnp.ndarray, local_strata: Strata,
+                    merged_vals: jnp.ndarray,
+                    fill=0.0) -> jnp.ndarray:
+    """Route a merged-[S] per-stratum array back to this device's slots."""
+    S = merged_keys.shape[0]
+    pos = jnp.clip(jnp.searchsorted(merged_keys, local_strata.keys), 0, S - 1)
+    hit = local_strata.valid & (merged_keys[pos] == local_strata.keys)
+    return jnp.where(hit, merged_vals[pos], fill)
+
+
+# ---------------------------------------------------------------------------
+# Per-device stage functions (run inside shard_map), mirroring
+# core/join.py's prepare / exact / sample split.
+# ---------------------------------------------------------------------------
+
+class DistPrepareOut(NamedTuple):
+    """Distributed stages 1-3 output.
+
+    ``sorted_rels``/``local_strata`` are per-device (sharded) working state;
+    ``strata``/``population``/counters are replicated and already merged into
+    the canonical single-device layout, ready for host-side decisions.
+    """
+
+    sorted_rels: list[Relation]         # per-device shuffled + sorted rows
+    local_strata: Strata                # per-device [S] slots
+    strata: Strata                      # merged canonical [S] (replicated)
+    live_counts: jnp.ndarray            # int32 [n] global
+    total_counts: jnp.ndarray           # int32 [n] global
+    population: jnp.ndarray             # f32 [S] merged
+    shuffled_tuple_bytes: jnp.ndarray   # f32 [] global live bytes moved
+    device_shuffled_bytes: jnp.ndarray  # f32 [k] per-device bytes sent
+    bucket_overflow: jnp.ndarray        # int32 [] global dropped rows
+    filter_bytes: jnp.ndarray           # f32 [] filter traffic (model)
+
+
+def dist_prepare_stage(rels: Sequence[Relation], num_blocks: int,
+                       max_strata: int, seed, axes: Sequence[str],
+                       *, bucket_cap: Optional[int] = None,
+                       filter_words: Optional[Sequence[jnp.ndarray]] = None,
+                       filter_stage: bool = True,
+                       merge: str = "gather") -> DistPrepareOut:
+    """Filter build/OR/AND/probe, key shuffle, local sort + group-by, merge.
+
+    ``filter_words`` (one ``[num_blocks, W]`` array per input) skips the
+    build+OR — the serving engine passes its per-dataset cached dataset
+    filters here so registered datasets pay the build once, not every step.
+
+    ``merge='gather'`` rebuilds the canonical [S] strata (replicated) for
+    the bit-parity path.  ``merge='psum'`` skips the gather entirely — the
+    ``strata``/``population`` members are then the PER-DEVICE strata (with a
+    psum'd overflow), keeping the paper's cheap-collective dataflow intact
+    for the roofline dry-runs.
+    """
+    axes = tuple(axes)
+    k = 1
+    for a in axes:
+        k *= axis_size(a)
+    n_rels = len(rels)
+    local_n = rels[0].capacity
+    total_counts = jax.lax.psum(jnp.stack([r.count() for r in rels]), axes)
+
+    if filter_stage:
+        if filter_words is None:
+            filter_words = [
+                or_reduce(bloom.build(r.keys, r.valid, num_blocks, seed).words,
+                          axes) for r in rels]
+        words = filter_words[0]
+        for w in filter_words[1:]:
+            words = words & w
+        jf = bloom.BloomFilter(words, seed)
+        rels = [Relation(r.keys, r.values,
+                         r.valid & bloom.contains(jf, r.keys)) for r in rels]
+        fbytes = jnp.asarray(num_blocks * bloom.WORDS_PER_BLOCK * 4
+                             * (k - 1) * (n_rels + 1), jnp.float32)
+    else:
+        fbytes = jnp.zeros((), jnp.float32)
+    live_counts = jax.lax.psum(jnp.stack([r.count() for r in rels]), axes)
+
+    # One partitioner for ALL relations (cogroup semantics) — matching keys
+    # must land on the same device or strata never meet.  cap = local_n can
+    # never overflow (a source holds local_n rows total); smaller caps trade
+    # memory for counted drops.
+    cap = bucket_cap or max(2 * local_n // k, 8)
+    shuffled, sent_counts, overflows = [], [], []
+    for r in rels:
+        out, sent, ovf = shuffle_by_key(r, k, cap, axes, seed + 101)
+        shuffled.append(out)
+        sent_counts.append(sent)
+        overflows.append(ovf)
+    my_sent = (sum(sent_counts) * TUPLE_BYTES).astype(jnp.float32)
+    device_sent = gather_concat(my_sent[None], axes)             # [k]
+    sent_bytes = jnp.sum(device_sent)
+    bucket_overflow = jax.lax.psum(sum(overflows), axes)
+
+    sorted_rels = [sort_by_key(r) for r in shuffled]
+    local_strata = build_strata(sorted_rels, max_strata)
+    if merge == "psum":
+        # no gather: every stratum keeps its per-device slot, overflow is
+        # the summed per-device build overflow (what was actually dropped)
+        local_strata = local_strata._replace(
+            overflow=jax.lax.psum(local_strata.overflow, axes))
+        return DistPrepareOut(sorted_rels, local_strata, local_strata,
+                              live_counts, total_counts,
+                              local_strata.population,
+                              sent_bytes, device_sent, bucket_overflow,
+                              fbytes)
+    merged = merge_strata(local_strata, axes, max_strata)
+    # replicate the (scalar) global overflow into the local strata too, so
+    # both pytrees flowing out of a shard_map stage are well-defined
+    local_strata = local_strata._replace(overflow=merged.overflow)
+    return DistPrepareOut(sorted_rels, local_strata, merged,
+                          live_counts, total_counts, merged.population,
+                          sent_bytes, device_sent, bucket_overflow, fbytes)
+
+
+def dist_exact_stage(sorted_rels: Sequence[Relation], local_strata: Strata,
+                     merged_strata: Strata, axes: Sequence[str], *,
+                     agg: str = "sum", expr: str = "sum"):
+    """§3.1.1 exact path: per-device per-stratum sums, merged, finished.
+
+    ``per_stratum_value_sums`` is offset-independent (scatter-add), so each
+    device reproduces the single-device per-stratum sums bit-for-bit; the
+    merge re-slots them and ``exact_stage_from_sums`` is the same finishing
+    arithmetic the single-device stage runs.
+    """
+    S = merged_strata.keys.shape[0]
+    S_k_local = per_stratum_value_sums(sorted_rels, local_strata)
+    _, merged = merge_by_key(local_strata.keys,
+                             [S_k_local[i] for i in range(S_k_local.shape[0])],
+                             axes, S)
+    S_k = jnp.stack([jnp.where(merged_strata.valid, m, 0.0) for m in merged])
+    return exact_stage_from_sums(S_k, merged_strata, agg=agg, expr=expr)
+
+
+def dist_sample_stage(sorted_rels: Sequence[Relation], local_strata: Strata,
+                      merged_keys: jnp.ndarray, merged_valid: jnp.ndarray,
+                      b_merged: jnp.ndarray, b_max: int, seed,
+                      axes: Sequence[str], *,
+                      agg: str = "sum", dedup: bool = False,
+                      confidence: float = 0.95, f_fn=None):
+    """Stages 4-6, distributed: local draws, merged stats, canonical finish.
+
+    ``b_merged`` is the host-decided per-stratum sample size in the MERGED
+    [S] layout (the same array a single-device driver would produce); it is
+    routed back to each device's local slots by key.  Draws are keyed on the
+    join key, so the owning device reproduces the single-device per-stratum
+    sufficient statistics exactly; the merge re-slots them and the estimator
+    runs on a bit-identical [S] stats array.
+    """
+    S = merged_keys.shape[0]
+    b_local = merged_to_local(merged_keys, local_strata,
+                              jnp.asarray(b_merged, jnp.float32))
+    f = EXPRS["sum"][0] if f_fn is None else f_fn
+    sample = sample_edges(sorted_rels, local_strata, b_local, b_max, seed, f)
+    st = sample.stats
+    _, merged = merge_by_key(
+        local_strata.keys,
+        [st.valid, st.population, st.n_sampled, st.sum_f, st.sum_f2,
+         sample.unique_f, sample.unique_count], axes, S)
+    ok = merged[0] & merged_valid
+    z = jnp.zeros((), jnp.float32)
+    vals = [jnp.where(ok, m, z) for m in merged[1:]]
+    mstats = StratumStats(ok, *vals[:4])
+    msample = SampleResult(mstats, vals[4], vals[5],
+                           jnp.zeros((1, 1)), jnp.zeros((1, 1), bool))
+    value, err, cnt, dof = estimate_stage(msample, agg=agg, dedup=dedup,
+                                          confidence=confidence)
+    return value, err, cnt, dof, mstats
 
 
 def _psum_parts(parts: SumParts, axes) -> SumParts:
@@ -164,6 +414,7 @@ def make_distributed_join(mesh: Mesh,
                           b_max: int = 1024,
                           confidence: float = 0.95,
                           num_blocks: Optional[int] = None,
+                          merge: str = "gather",     # 'gather' | 'psum'
                           seed: int = 0):
     """Build a jitted SPMD join over ``mesh``.
 
@@ -171,6 +422,10 @@ def make_distributed_join(mesh: Mesh,
     sharded over ``join_axes``) plus a traced ``d_dt`` scalar (measured filter
     latency, feeds the latency cost function) and returns a
     :class:`DistJoinResult` of replicated scalars.
+
+    ``merge='gather'`` (default) reproduces the single-device pipeline
+    bit-for-bit; ``merge='psum'`` is the paper's partial-aggregate merge
+    (cheapest collectives — what the cluster-scale roofline dry-runs lower).
 
     Static choices (mode, filtering, capacities) are compile-time — the
     "driver" decides them; re-compilation on change is the Spark-stage
@@ -185,62 +440,42 @@ def make_distributed_join(mesh: Mesh,
                 "product": exact_sum_of_products}[expr]
     if budget is not None and budget.latency_s is not None:
         assert cost_model is not None
+    assert merge in ("gather", "psum"), merge
 
     def body(d_dt, *flat):
         rels = [Relation(*flat[3 * i: 3 * i + 3]) for i in range(n_rels)]
         local_n = rels[0].capacity
-        nb = num_blocks
-        input_total = jax.lax.psum(
-            sum(r.count() for r in rels), axes)
-
-        # --- stage 1: filter (Alg. 1) ---
-        if filter_stage:
-            ds_words = [or_reduce(bloom.build(r.keys, r.valid, nb, seed).words,
-                                  axes) for r in rels]
-            jf = bloom.BloomFilter(functools.reduce(jnp.bitwise_and, ds_words),
-                                   seed)
-            rels = [Relation(r.keys, r.values,
-                             r.valid & bloom.contains(jf, r.keys))
-                    for r in rels]
-            fbytes = jnp.asarray(nb * bloom.WORDS_PER_BLOCK * 4
-                                 * (k - 1) * (n_rels + 1), jnp.float32)
-        else:
-            fbytes = jnp.zeros((), jnp.float32)
-        live_total = jax.lax.psum(sum(r.count() for r in rels), axes)
-
-        # --- stage 2: shuffle live tuples so strata are device-complete ---
-        # NB: one partitioner for ALL relations (cogroup semantics) — matching
-        # keys must land on the same device or strata never meet.
-        cap = bucket_cap or max(2 * local_n // k, 8)
-        shuffled, sent_counts, overflows = [], [], []
-        for i, r in enumerate(rels):
-            out, sent, ovf = shuffle_by_key(r, k, cap, axes, seed + 101)
-            shuffled.append(out)
-            sent_counts.append(sent)
-            overflows.append(ovf)
-        sent_bytes = jax.lax.psum(sum(sent_counts), axes) * TUPLE_BYTES
-        bucket_overflow = jax.lax.psum(sum(overflows), axes)
-
-        # --- stage 3: local group-by ---
-        sorted_rels = [sort_by_key(r) for r in shuffled]
-        strata = build_strata(sorted_rels, max_strata or k * cap)
-        total_pop = jax.lax.psum(jnp.sum(strata.population), axes)
-        strata_overflow = jax.lax.psum(strata.overflow, axes)
-
+        S = max_strata or k * (bucket_cap or max(2 * local_n // k, 8))
+        prep = dist_prepare_stage(rels, num_blocks, S, seed, axes,
+                                  bucket_cap=bucket_cap,
+                                  filter_stage=filter_stage, merge=merge)
+        live_total = jnp.sum(prep.live_counts).astype(jnp.float32)
+        input_total = jnp.sum(prep.total_counts).astype(jnp.float32)
+        # psum mode: population is per-device, so the global total is a psum
+        total_pop = jnp.sum(prep.population)
+        if merge == "psum":
+            total_pop = jax.lax.psum(total_pop, axes)
         meters = dict(
-            shuffled_tuple_bytes=sent_bytes.astype(jnp.float32),
-            filter_bytes=fbytes,
-            live_total=live_total.astype(jnp.float32),
-            input_total=input_total.astype(jnp.float32),
+            shuffled_tuple_bytes=prep.shuffled_tuple_bytes,
+            filter_bytes=prep.filter_bytes,
+            live_total=live_total,
+            input_total=input_total,
             overlap_fraction=live_total / jnp.maximum(input_total, 1),
-            bucket_overflow=bucket_overflow,
-            strata_overflow=strata_overflow,
+            bucket_overflow=prep.bucket_overflow,
+            strata_overflow=prep.strata.overflow,
             total_population=total_pop,
+            device_shuffled_bytes=prep.device_shuffled_bytes,
         )
 
         if mode == "exact":
-            est = jax.lax.psum(exact_fn(sorted_rels, strata), axes)
-            cnt = jax.lax.psum(exact_count(strata), axes)
+            if merge == "psum":
+                est = jax.lax.psum(exact_fn(prep.sorted_rels,
+                                            prep.local_strata), axes)
+                cnt = jax.lax.psum(exact_count(prep.local_strata), axes)
+            else:
+                est, cnt = dist_exact_stage(prep.sorted_rels,
+                                            prep.local_strata, prep.strata,
+                                            axes, agg="sum", expr=expr)
             return DistJoinResult(est, jnp.zeros(()), cnt, jnp.zeros(()),
                                   sample_draws=jnp.zeros(()), **meters)
 
@@ -254,21 +489,34 @@ def make_distributed_join(mesh: Mesh,
             s = jnp.asarray(budget.pilot_fraction, jnp.float32)
         else:
             raise ValueError("sample mode needs a fraction or a budget")
-        b_i = jnp.where(strata.population > 0,
-                        jnp.maximum(jnp.ceil(s * strata.population), 1.0), 0.0)
 
-        # --- stage 5: sample during join + psum merge (§3.3/§3.4) ---
-        sample = sample_edges(sorted_rels, strata, b_i, b_max, seed + 1, f_fn)
-        parts = _psum_parts(clt_sum_parts(sample.stats), axes)
-        est = clt_finish(parts, confidence)
-        return DistJoinResult(est.estimate, est.error_bound, parts.count,
-                              est.dof,
-                              sample_draws=parts.n_draws, **meters)
+        # --- stage 5: sample during join + merge (§3.3/§3.4) ---
+        if merge == "psum":
+            # size b_i straight off each device's own strata — every local
+            # stratum gets its budget (no global-[S] truncation)
+            b_local = _pilot_sizes(prep.local_strata.population, s)
+            sample = sample_edges(prep.sorted_rels, prep.local_strata,
+                                  b_local, b_max, seed + 1, f_fn)
+            parts = _psum_parts(clt_sum_parts(sample.stats), axes)
+            est = clt_finish(parts, confidence)
+            return DistJoinResult(est.estimate, est.error_bound, parts.count,
+                                  est.dof,
+                                  sample_draws=parts.n_draws, **meters)
+        b_merged = _pilot_sizes(prep.population, s)
+        value, err, cnt, dof, mstats = dist_sample_stage(
+            prep.sorted_rels, prep.local_strata, prep.strata.keys,
+            prep.strata.valid, b_merged, b_max, seed + 1, axes,
+            agg="sum", dedup=False, confidence=confidence, f_fn=f_fn)
+        return DistJoinResult(value, err, cnt, dof,
+                              sample_draws=jnp.sum(mstats.n_sampled),
+                              **meters)
 
     rel_spec = [P(axes), P(axes), P(axes)] * n_rels
     fn = shard_map(body, mesh=mesh,
                    in_specs=(P(), *rel_spec),
-                   out_specs=DistJoinResult(*([P()] * len(DistJoinResult._fields))))
+                   out_specs=DistJoinResult(
+                       *([P()] * len(DistJoinResult._fields))),
+                   check_rep=False)
 
     @jax.jit
     def run(rels: Sequence[Relation], d_dt=0.0):
@@ -285,3 +533,145 @@ def distributed_approx_join(mesh: Mesh, rels: Sequence[Relation],
     run = make_distributed_join(mesh, n_rels=len(rels), fp_rate=fp_rate,
                                 num_blocks=num_blocks, **kw)
     return run(rels)
+
+
+# ---------------------------------------------------------------------------
+# Serving executables: batched (vmap over query slots) distributed stages,
+# one shard_map program per stage so the JoinServer's executable cache keys
+# (stage, shape_class, batch) work identically for both backends.
+# ---------------------------------------------------------------------------
+
+def _rel_specs(axes, n):
+    s = P(None, axes)
+    return [Relation(s, s, s) for _ in range(n)]
+
+
+def _local_strata_spec(axes):
+    sharded = P(None, axes)
+    return Strata(keys=sharded, valid=sharded,
+                  starts=P(None, None, axes), counts=P(None, None, axes),
+                  overflow=P())
+
+
+def make_serve_prepare(mesh: Mesh, axes: Sequence[str], *, n_rels: int,
+                       num_blocks: int, max_strata: int,
+                       bucket_cap: Optional[int] = None):
+    """Batched distributed prepare: ``(rels_b, words_b, seeds) -> prep``.
+
+    ``rels_b``: list of Relations with fields ``[B, N]``, sharded over
+    ``axes`` on the row dim.  ``words_b``: ``[B, n, nb, W]`` replicated
+    prebuilt dataset-filter words.  Returns a :class:`DistPrepareOut` whose
+    per-device members stay sharded (feed them straight into the sample /
+    exact executables) and whose merged members are replicated.
+    """
+    axes = tuple(axes)
+
+    def per_query(flat, words, seed):
+        rels = [Relation(*flat[3 * i: 3 * i + 3]) for i in range(n_rels)]
+        return dist_prepare_stage(
+            rels, num_blocks, max_strata, seed, axes, bucket_cap=bucket_cap,
+            filter_words=[words[i] for i in range(n_rels)])
+
+    def batched(*args):
+        return jax.vmap(per_query)(*args)
+
+    flat_spec = tuple(P(None, axes) for _ in range(3 * n_rels))
+    out_spec = DistPrepareOut(
+        sorted_rels=_rel_specs(axes, n_rels),
+        local_strata=_local_strata_spec(axes),
+        strata=Strata(P(), P(), P(), P(), P()),
+        live_counts=P(), total_counts=P(), population=P(),
+        shuffled_tuple_bytes=P(), device_shuffled_bytes=P(),
+        bucket_overflow=P(), filter_bytes=P())
+    fn = shard_map(batched, mesh=mesh,
+                   in_specs=(flat_spec, P(), P()),
+                   out_specs=out_spec, check_rep=False)
+
+    @jax.jit
+    def run(rels_b: Sequence[Relation], words_b, seeds):
+        flat = tuple(x for r in rels_b for x in (r.keys, r.values, r.valid))
+        return fn(flat, words_b, seeds)
+
+    return run
+
+
+def make_serve_sample(mesh: Mesh, axes: Sequence[str], *, n_rels: int,
+                      b_max: int, agg: str, dedup: bool, confidence: float,
+                      expr: str):
+    """Batched distributed sample+estimate executable."""
+    axes = tuple(axes)
+    f_fn = EXPRS[expr][0]
+
+    def per_query(flat, lstrata, mkeys, mvalid, b_merged, seed):
+        sorted_rels = [Relation(*flat[3 * i: 3 * i + 3])
+                       for i in range(n_rels)]
+        return dist_sample_stage(sorted_rels, lstrata, mkeys, mvalid,
+                                 b_merged, b_max, seed, axes, agg=agg,
+                                 dedup=dedup, confidence=confidence, f_fn=f_fn)
+
+    def batched(*args):
+        return jax.vmap(per_query)(*args)
+
+    flat_spec = tuple(P(None, axes) for _ in range(3 * n_rels))
+    stats_spec = StratumStats(P(), P(), P(), P(), P())
+    fn = shard_map(batched, mesh=mesh,
+                   in_specs=(flat_spec, _local_strata_spec(axes), P(), P(),
+                             P(), P()),
+                   out_specs=(P(), P(), P(), P(), stats_spec),
+                   check_rep=False)
+
+    @jax.jit
+    def run(sorted_rels, lstrata, mkeys, mvalid, b_merged, seeds):
+        flat = tuple(x for r in sorted_rels
+                     for x in (r.keys, r.values, r.valid))
+        return fn(flat, lstrata, mkeys, mvalid, b_merged, seeds)
+
+    return run
+
+
+def make_serve_exact(mesh: Mesh, axes: Sequence[str], *, n_rels: int,
+                     agg: str, expr: str):
+    """Batched distributed exact-path executable."""
+    axes = tuple(axes)
+
+    def per_query(flat, lstrata, mstrata):
+        sorted_rels = [Relation(*flat[3 * i: 3 * i + 3])
+                       for i in range(n_rels)]
+        return dist_exact_stage(sorted_rels, lstrata, mstrata, axes,
+                                agg=agg, expr=expr)
+
+    def batched(*args):
+        return jax.vmap(per_query)(*args)
+
+    flat_spec = tuple(P(None, axes) for _ in range(3 * n_rels))
+    fn = shard_map(batched, mesh=mesh,
+                   in_specs=(flat_spec, _local_strata_spec(axes),
+                             Strata(P(), P(), P(), P(), P())),
+                   out_specs=(P(), P()), check_rep=False)
+
+    @jax.jit
+    def run(sorted_rels, lstrata, mstrata):
+        flat = tuple(x for r in sorted_rels
+                     for x in (r.keys, r.values, r.valid))
+        return fn(flat, lstrata, mstrata)
+
+    return run
+
+
+def make_serve_filter_build(mesh: Mesh, axes: Sequence[str], *,
+                            num_blocks: int):
+    """Distributed dataset-filter build: sharded Relation -> replicated words.
+
+    The OR-reduce of per-device partition filters equals the single-device
+    build bit-for-bit (scatter-OR is a set union), so cached words from this
+    executable are interchangeable with single-device ones.
+    """
+    axes = tuple(axes)
+
+    def build(keys, valid, seed):
+        return or_reduce(bloom.build(keys, valid, num_blocks, seed).words,
+                         axes)
+
+    fn = shard_map(build, mesh=mesh, in_specs=(P(axes), P(axes), P()),
+                   out_specs=P(), check_rep=False)
+    return jax.jit(fn)

@@ -32,7 +32,9 @@ from repro.core.estimators import (Estimate, StratumStats, clt_avg, clt_count,
 from repro.core.relation import Relation, sort_by_key
 from repro.core.sampling import (SampleResult, Strata, build_strata,
                                  default_f, exact_count, exact_sum_of_products,
-                                 exact_sum_of_sums, sample_edges)
+                                 exact_sum_of_products_from,
+                                 exact_sum_of_sums, exact_sum_of_sums_from,
+                                 sample_edges)
 
 TUPLE_BYTES = 8  # uint32 key + float32 value
 
@@ -130,11 +132,54 @@ def prepare_stage(rels: Sequence[Relation], num_blocks: int, max_strata: int,
                       strata.population)
 
 
+def prepare_stage_pre(rels: Sequence[Relation], filter_words: jnp.ndarray,
+                      max_strata: int, seed) -> PrepareOut:
+    """:func:`prepare_stage` with PREBUILT per-input filter words.
+
+    ``filter_words`` is ``[n_inputs, num_blocks, W]`` — the packed words of
+    each input's dataset filter, e.g. from the JoinServer's per-dataset cache
+    (built once per ``(num_blocks, seed)``, reused every step).  Everything
+    downstream of the build is identical to :func:`prepare_stage`, so the
+    results are bit-identical to building from scratch.
+    """
+    words = filter_words[0]
+    for i in range(1, filter_words.shape[0]):
+        words = words & filter_words[i]
+    join_filter = bloom.BloomFilter(words, seed)
+    live = filter_relations(rels, join_filter)
+    sorted_rels = [sort_by_key(r) for r in live]
+    strata = build_strata(sorted_rels, max_strata)
+    return PrepareOut(sorted_rels, strata,
+                      jnp.stack([r.count() for r in live]),
+                      jnp.stack([r.count() for r in rels]),
+                      strata.population)
+
+
 def exact_stage(sorted_rels: Sequence[Relation], strata: Strata, *,
                 agg: str, expr: str) -> tuple[jnp.ndarray, jnp.ndarray]:
     """§3.1.1 exact fast path: (estimate, count) from sufficient statistics."""
     exact_fn = EXPRS[expr][1]
     est = exact_fn(sorted_rels, strata)
+    cnt = exact_count(strata)
+    if agg == "count":
+        est = cnt
+    elif agg == "avg":
+        est = est / jnp.maximum(cnt, 1.0)
+    return est, cnt
+
+
+def exact_stage_from_sums(S_k: jnp.ndarray, strata: Strata, *,
+                          agg: str, expr: str
+                          ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """:func:`exact_stage` from per-stratum value sums ``[n, S]``.
+
+    The distributed path computes ``S_k`` per device, merges the owned strata
+    into the canonical key-sorted ``[S]`` layout, and finishes here with the
+    same arithmetic as the single-device stage — bit-identical results.
+    """
+    finish = {"sum": exact_sum_of_sums_from,
+              "product": exact_sum_of_products_from}[expr]
+    est = finish(S_k, strata)
     cnt = exact_count(strata)
     if agg == "count":
         est = cnt

@@ -14,7 +14,8 @@ Relations with the same keys.
 
 from __future__ import annotations
 
-from typing import NamedTuple
+import hashlib
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -67,19 +68,41 @@ def pad_to(rel: Relation, capacity: int) -> Relation:
     )
 
 
-def bucket_capacity(n: int) -> int:
+def bucket_capacity(n: int, minimum: int = 1) -> int:
     """Round a row count up to the next power of two (shape-class bucketing).
 
     Serving batches queries whose relations share a capacity bucket, so the
     compiled executable count is logarithmic in the capacity range rather
-    than linear in the number of distinct input sizes.
+    than linear in the number of distinct input sizes.  ``minimum`` floors
+    the bucket (a mesh-sharded relation needs capacity divisible by the
+    device count; any power of two >= k is).
     """
-    return 1 << max(int(n) - 1, 0).bit_length()
+    return max(1 << max(int(n) - 1, 0).bit_length(), int(minimum))
 
 
-def bucket_to_pow2(rel: Relation) -> Relation:
+def bucket_to_pow2(rel: Relation, minimum: int = 1) -> Relation:
     """Pad a relation with invalid rows up to its power-of-two bucket."""
-    return pad_to(rel, bucket_capacity(rel.capacity))
+    return pad_to(rel, bucket_capacity(rel.capacity, minimum))
+
+
+def fingerprint(rel: Relation) -> str:
+    """Content id of a relation's key set (keys + validity mask).
+
+    Keyed on exactly what a Bloom filter build consumes, so two relations
+    with the same keys/validity share cached filter words regardless of
+    their value columns (the JoinServer's per-dataset filter cache).
+    """
+    h = hashlib.sha1()
+    h.update(np.asarray(jax.device_get(rel.keys)).tobytes())
+    h.update(np.packbits(np.asarray(jax.device_get(rel.valid))).tobytes())
+    return h.hexdigest()
+
+
+def shard_to_mesh(rel: Relation, mesh, axes: Sequence[str]) -> Relation:
+    """Place a relation's rows sharded over ``axes`` of ``mesh``."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    sh = NamedSharding(mesh, PartitionSpec(tuple(axes)))
+    return Relation(*(jax.device_put(x, sh) for x in rel))
 
 
 def sort_by_key(rel: Relation) -> Relation:

@@ -196,38 +196,73 @@ def sample_edges(sorted_rels: Sequence[Relation], strata: Strata,
 # given and the overlap is large.
 # ---------------------------------------------------------------------------
 
-def _per_stratum_value_sums(sorted_rels, strata) -> jnp.ndarray:
-    """[n_sides, S] sum of values per stratum per side (prefix-sum trick)."""
+def per_stratum_value_sums(sorted_rels, strata) -> jnp.ndarray:
+    """[n_sides, S] sum of values per stratum per side.
+
+    Scatter-add keyed by stratum slot rather than a cumsum-difference: each
+    stratum's sum then depends only on its OWN rows (same relative order),
+    never on what happens to sort before them — which is what lets a device
+    holding a shuffled subset of the strata reproduce the single-device
+    per-stratum sums bit-for-bit (core/distributed.py relies on this).
+    """
+    S = strata.keys.shape[0]
     sums = []
     for side, r in enumerate(sorted_rels):
-        csum = jnp.concatenate(
-            [jnp.zeros((1,), jnp.float32),
-             jnp.cumsum(jnp.where(r.valid, r.values, 0.0))])
-        s0 = strata.starts[side]
-        s1 = s0 + strata.counts[side]
-        sums.append(csum[s1] - csum[s0])
+        mk = r.masked_keys(SENTINEL)
+        slot = jnp.clip(jnp.searchsorted(strata.keys, mk), 0, S - 1)
+        ok = r.valid & (strata.keys[slot] == mk) & strata.valid[slot]
+        tgt = jnp.where(ok, slot, S)  # overflow row, dropped
+        sums.append(jnp.zeros((S + 1,), jnp.float32).at[tgt].add(
+            jnp.where(ok, r.values, 0.0))[:S])
     return jnp.stack(sums)
 
 
-def exact_sum_of_sums(sorted_rels, strata) -> jnp.ndarray:
-    """Exact SUM(v_1 + ... + v_n) over the join output."""
-    S_k = _per_stratum_value_sums(sorted_rels, strata)        # [n, S]
+# Back-compat alias (pre-PR-2 private name).
+_per_stratum_value_sums = per_stratum_value_sums
+
+
+def exact_sum_of_sums_from(S_k: jnp.ndarray, strata: Strata) -> jnp.ndarray:
+    """Finish SUM(v_1 + ... + v_n) from per-stratum value sums [n, S].
+
+    Split out so the distributed pipeline can merge per-device S_k into the
+    canonical [S] layout and then run the *same* finishing arithmetic as the
+    single-device path (bit-identical results).
+    """
     B_k = jnp.maximum(strata.counts, 0).astype(jnp.float32)   # [n, S]
     total_B = strata.population                               # [S]
     per_stratum = jnp.zeros_like(total_B)
     n = S_k.shape[0]
     for k in range(n):
-        prod_others = jnp.where(B_k[k] > 0, total_B / jnp.maximum(B_k[k], 1.0),
-                                0.0)
-        per_stratum = per_stratum + S_k[k] * prod_others
+        # NB: the select sits BETWEEN the multiply and the accumulate add, so
+        # XLA cannot contract add(mul(..)) into an fma — fma rounds once, and
+        # whether the contraction fires depends on what else is in the fused
+        # computation, which would make the result depend on jit context
+        # (eager vs jit(vmap(stage)) vs shard_map).  Bit-parity between the
+        # driver, the serving engine, and the distributed pipeline needs this
+        # arithmetic to be context-independent.
+        term = jnp.where(B_k[k] > 0,
+                         S_k[k] * (total_B / jnp.maximum(B_k[k], 1.0)), 0.0)
+        per_stratum = per_stratum + term
     return jnp.sum(jnp.where(strata.joinable, per_stratum, 0.0))
+
+
+def exact_sum_of_products_from(S_k: jnp.ndarray,
+                               strata: Strata) -> jnp.ndarray:
+    """Finish SUM(v_1 * ... * v_n) from per-stratum value sums [n, S]."""
+    per_stratum = jnp.prod(S_k, axis=0)
+    return jnp.sum(jnp.where(strata.joinable, per_stratum, 0.0))
+
+
+def exact_sum_of_sums(sorted_rels, strata) -> jnp.ndarray:
+    """Exact SUM(v_1 + ... + v_n) over the join output."""
+    return exact_sum_of_sums_from(per_stratum_value_sums(sorted_rels, strata),
+                                  strata)
 
 
 def exact_sum_of_products(sorted_rels, strata) -> jnp.ndarray:
     """Exact SUM(v_1 * ... * v_n) over the join output."""
-    S_k = _per_stratum_value_sums(sorted_rels, strata)
-    per_stratum = jnp.prod(S_k, axis=0)
-    return jnp.sum(jnp.where(strata.joinable, per_stratum, 0.0))
+    return exact_sum_of_products_from(
+        per_stratum_value_sums(sorted_rels, strata), strata)
 
 
 def exact_count(strata: Strata) -> jnp.ndarray:

@@ -45,11 +45,14 @@ def run_join_cell(mesh, *, log2_rows: int, mode: str, filter_stage: bool,
     max_strata = min(chips * bucket_cap, 1 << 16)
     num_blocks = bloom.num_blocks_for(local, fp_rate)  # per-shard filter
 
+    # merge='psum' keeps the paper's partial-aggregate merge (the Eq. 24
+    # collective census this dry-run validates); the default gather merge is
+    # for bit-parity with the single-device pipeline at serving scale.
     run = make_distributed_join(
         mesh, n_rels=2, join_axes=axes, mode=mode,
         filter_stage=filter_stage, sample_fraction=sample_fraction,
         bucket_cap=bucket_cap, max_strata=max_strata, b_max=512,
-        num_blocks=num_blocks)
+        num_blocks=num_blocks, merge="psum")
 
     sh = NamedSharding(mesh, P(axes))
     rel = Relation(

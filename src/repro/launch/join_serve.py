@@ -3,16 +3,26 @@
 Builds synthetic tenant datasets in several capacity shape classes,
 registers them as named handles, submits an interleaved query stream
 (error-budget, latency-budget, and exact tenants), and prints throughput
-plus the server's executable-cache / batching diagnostics.
+plus the server's executable-cache / batching / filter-cache diagnostics.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.join_serve --tenants 4 \
       --queries-per-tenant 8 --slots 4
+
+  # distributed: one batched step spans all mesh devices
+  PYTHONPATH=src python -m repro.launch.join_serve --mesh 8
+
+``--mesh N`` re-execs under ``--xla_force_host_platform_device_count`` when
+the process has fewer than N devices (the flag must be set before jax
+initializes), then serves through the shard_map pipeline.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
+import subprocess
+import sys
 import time
 
 from repro.core.budget import QueryBudget
@@ -22,9 +32,16 @@ from repro.runtime.join_serve import JoinRequest, JoinServer
 
 
 def run(*, tenants: int = 4, queries_per_tenant: int = 8, slots: int = 4,
-        base_n: int = 1 << 12, seed: int = 0) -> dict:
+        base_n: int = 1 << 12, seed: int = 0, mesh_devices: int = 0) -> dict:
+    mesh = None
+    if mesh_devices:
+        import jax
+        import numpy as np
+        from jax.sharding import Mesh
+        mesh = Mesh(np.array(jax.devices()[:mesh_devices]), ("data",))
     server = JoinServer(batch_slots=slots,
-                        cost_model=CostModel(beta_compute=1e-7, epsilon=1e-3))
+                        cost_model=CostModel(beta_compute=1e-7, epsilon=1e-3),
+                        mesh=mesh)
     budgets = [QueryBudget(error=0.5), QueryBudget(latency_s=0.5),
                QueryBudget()]
     for t in range(tenants):
@@ -45,13 +62,20 @@ def run(*, tenants: int = 4, queries_per_tenant: int = 8, slots: int = 4,
 
     d = server.diagnostics
     qps = d.queries / max(dt, 1e-9)
+    where = f"mesh[{mesh_devices}]" if mesh_devices else "single-device"
     print(f"[join-serve] {d.queries} queries from {tenants} tenants in "
-          f"{dt:.2f}s ({qps:.1f} q/s)")
+          f"{dt:.2f}s ({qps:.1f} q/s) on {where}")
     print(f"  steps={d.steps} max_batch={d.max_batch} "
           f"compiles={d.compiles} cache_hits={d.cache_hits}")
     print(f"  exact={d.exact_queries} sampled={d.sampled_queries} "
           f"mean_queue_latency={d.queue_latency_s / max(d.queries, 1):.3f}s")
-    print(f"  shuffled_bytes_saved={d.shuffled_bytes_saved:.0f}")
+    print(f"  filter_builds={d.filter_builds} "
+          f"filter_cache_hits={d.filter_cache_hits} "
+          f"shuffled_bytes_saved={d.shuffled_bytes_saved:.0f}")
+    if mesh_devices:
+        per_dev = [f"{b:.0f}" for b in d.per_device_shuffled_bytes]
+        print(f"  dist_shuffled_tuple_bytes={d.dist_shuffled_tuple_bytes:.0f}"
+              f" per_device={per_dev}")
     for r in reqs[:3]:
         print(f"  {r.query_id}: estimate={float(r.result.estimate):.1f} "
               f"+-{float(r.result.error_bound):.1f} "
@@ -66,9 +90,26 @@ def main() -> None:
     ap.add_argument("--queries-per-tenant", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--base-n", type=int, default=1 << 12)
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="serve distributed over N devices (0 = off)")
     args = ap.parse_args()
+    if args.mesh:
+        import jax
+        if jax.device_count() < args.mesh:
+            # the device-count flag must precede jax init: re-exec
+            env = dict(os.environ)
+            env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " "
+                                "--xla_force_host_platform_device_count="
+                                f"{args.mesh}").strip()
+            # the flag only multiplies CPU devices: pin the child to the cpu
+            # platform or (on a GPU host) it would see 1 device and re-exec
+            # forever
+            env.setdefault("JAX_PLATFORMS", "cpu")
+            raise SystemExit(subprocess.call(
+                [sys.executable, "-m", "repro.launch.join_serve",
+                 *sys.argv[1:]], env=env))
     run(tenants=args.tenants, queries_per_tenant=args.queries_per_tenant,
-        slots=args.slots, base_n=args.base_n)
+        slots=args.slots, base_n=args.base_n, mesh_devices=args.mesh)
 
 
 if __name__ == "__main__":

@@ -1,4 +1,4 @@
-"""Batched multi-tenant ApproxJoin serving engine.
+"""Batched multi-tenant ApproxJoin serving engine — single-device or mesh.
 
 The LM ``Server`` (runtime/serve.py) batches token decodes across slots; the
 ``JoinServer`` does the same for ApproxJoin queries.  A :class:`JoinRequest`
@@ -9,35 +9,46 @@ aggregate/expression, and a tenant ``query_id``.  The engine:
   (:func:`repro.core.relation.bucket_to_pow2`) so queries fall into a small
   number of *shape classes*;
 * keeps a **compiled-executable cache** keyed by
-  ``(stage, shape_class, batch)`` — repeat tenants never recompile;
+  ``(stage, shape_class, batch)`` — repeat tenants never recompile.  Shape
+  classes also key on the **mesh shape**, so a server can serve mixed
+  single-device and distributed classes without collisions;
 * **batches same-shape-class queries with vmap** across the
-  filter-build/probe/sort/strata and sample/estimate stages, so one engine
-  step is one fused device dispatch per stage regardless of how many tenants
-  share it;
+  filter-probe/sort/strata and sample/estimate stages, so one engine step is
+  one fused device dispatch per stage regardless of how many tenants share
+  it — and, when constructed with ``mesh=``, that one dispatch **spans all
+  mesh devices** through ``core/distributed.py``'s shard_map pipeline;
+* caches **per-dataset Bloom filter words** keyed by
+  ``(relation fingerprint, num_blocks, seed)``: a registered dataset pays
+  the filter build once, then every subsequent step reuses the cached words
+  (``ServerDiagnostics.filter_builds`` / ``filter_cache_hits``);
 * shares one :class:`SigmaRegistry` and :class:`CostModel` across tenants, so
   a repeated ``query_id`` gets the paper's §3.2-II adaptive sample sizing for
   free — and tenants never see each other's sigmas (the registry is keyed by
   ``query_id``).
 
 Results are bit-identical to a direct :func:`repro.core.join.approx_join`
-call on the same (bucketed) relations with the same seed: both paths compose
-the same stage functions from ``core/join.py``, and ``jit(vmap(stage))`` on
-this backend reproduces the eager per-example arithmetic exactly (asserted in
-``tests/test_join_serve.py``).
+call on the same (bucketed) relations with the same seed — on a mesh too:
+the distributed stages merge per-device strata/statistics back into the
+canonical single-device slot layout before estimating, so a mesh of any size
+reproduces the single-device arithmetic exactly (asserted across mesh sizes
+1/2/4/8 in ``tests/test_join_serve_distributed.py``).
 
 Per-query dynamic decisions (exact-affordable?  per-stratum ``b_i`` from the
 budget + sigma feedback) stay on the host, exactly as in ``approx_join`` —
 the driver role.  Sigma feedback lands *between engine steps*: requests with
 the same ``query_id`` co-batched into one step all see the registry state at
 dispatch time, where a sequential driver would thread each execution's
-feedback into the next.  ``use_kernels`` queries are served through the Pallas path
-per-query (Pallas calls are not batched under vmap here); they still share
-the sigma registry and are tracked in the executable cache.
+feedback into the next.  ``use_kernels`` queries are served through the
+Pallas path per-query (Pallas calls are not batched under vmap here, and the
+kernels are single-device — a mesh server still serves them, on the default
+device); they still share the sigma registry and are tracked in the
+executable cache.
 """
 
 from __future__ import annotations
 
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from functools import partial
 from typing import NamedTuple, Optional, Sequence
@@ -49,17 +60,25 @@ import numpy as np
 from repro.core import bloom
 from repro.core.budget import QueryBudget
 from repro.core.cost import CostModel, SigmaRegistry
+from repro.core.distributed import (make_serve_exact, make_serve_filter_build,
+                                    make_serve_prepare, make_serve_sample)
 from repro.core.join import (EXPRS, TUPLE_BYTES, JoinDiagnostics, JoinResult,
                              approx_join, decide_sample_sizes, exact_stage,
-                             measured_sigma, prepare_stage, sample_stage)
-from repro.core.relation import Relation, bucket_capacity, bucket_to_pow2
+                             measured_sigma, prepare_stage_pre, sample_stage)
+from repro.core.relation import (Relation, bucket_capacity, bucket_to_pow2,
+                                 fingerprint, shard_to_mesh)
 
 DEFAULT_B_MAX = 2048
 AGGS = ("sum", "count", "avg", "stdev")
 
 
 class ShapeClass(NamedTuple):
-    """Static compilation signature of a query (the executable-cache key)."""
+    """Static compilation signature of a query (the executable-cache key).
+
+    ``mesh`` is ``()`` for a single-device server, else the ordered
+    ``(axis name, axis size)`` pairs of the join axes — so the same query
+    stream served on different meshes compiles (and caches) per mesh shape.
+    """
 
     caps: tuple[int, ...]    # per-side bucketed capacities
     n_inputs: int
@@ -71,6 +90,7 @@ class ShapeClass(NamedTuple):
     use_kernels: bool
     fp_rate: float
     confidence: float
+    mesh: tuple = ()
 
 
 @dataclass
@@ -95,6 +115,7 @@ class JoinRequest:
     queue_latency_s: float = 0.0
     _class: Optional[ShapeClass] = field(default=None, repr=False)
     _submit_t: float = field(default=0.0, repr=False)
+    _fps: Optional[list[str]] = field(default=None, repr=False)
 
 
 @dataclass
@@ -110,23 +131,33 @@ class ServerDiagnostics:
     kernel_queries: int = 0
     queue_latency_s: float = 0.0    # summed over finished queries
     filter_s: float = 0.0           # summed batch filter-stage wall time
+    filter_build_s: float = 0.0     # summed filter-word build wall time
+    filter_builds: int = 0          # Bloom word builds (cache misses)
+    filter_cache_hits: int = 0      # Bloom word reuses
     shuffled_bytes_saved: float = 0.0
+    # distributed-mode meters (mesh servers only)
+    dist_shuffled_tuple_bytes: float = 0.0   # measured live bytes moved
+    per_device_shuffled_bytes: Optional[np.ndarray] = None  # f64 [k]
     max_batch: int = 0
 
     def snapshot(self) -> dict:
-        return dict(vars(self))
+        d = dict(vars(self))
+        if d["per_device_shuffled_bytes"] is not None:
+            d["per_device_shuffled_bytes"] = [
+                float(x) for x in d["per_device_shuffled_bytes"]]
+        return d
 
 
-def shape_class_of(req: JoinRequest) -> ShapeClass:
+def shape_class_of(req: JoinRequest, mesh_shape: tuple = ()) -> ShapeClass:
     caps = tuple(bucket_capacity(r.capacity) for r in req.rels)
     return ShapeClass(caps, len(caps), req.max_strata, req.b_max,
                       req.expr, req.agg, req.dedup, req.use_kernels,
-                      req.fp_rate, req.budget.confidence)
+                      req.fp_rate, req.budget.confidence, mesh_shape)
 
 
-def _make_prepare(num_blocks: int, max_strata: int):
-    def fn(rels, seed):
-        return prepare_stage(rels, num_blocks, max_strata, seed)
+def _make_prepare(max_strata: int):
+    def fn(rels, words, seed):
+        return prepare_stage_pre(rels, words, max_strata, seed)
     return jax.jit(jax.vmap(fn))
 
 
@@ -146,34 +177,98 @@ def _make_exact(agg: str, expr: str):
     return jax.jit(jax.vmap(fn))
 
 
+def _make_filter_build(num_blocks: int):
+    def fn(keys, valid, seed):
+        return bloom.build(keys, valid, num_blocks, seed).words
+    return jax.jit(fn)
+
+
 class JoinServer:
-    """Slot-based batched ApproxJoin engine (the LM ``Server``, for joins)."""
+    """Slot-based batched ApproxJoin engine (the LM ``Server``, for joins).
+
+    ``mesh=None`` serves every batch on the default device.  With a
+    ``jax.sharding.Mesh``, registered datasets are sharded over
+    ``join_axes`` at :meth:`register_dataset` time and every engine step's
+    fused dispatch runs through the shard_map pipeline — one batched step
+    spans all mesh devices, with bit-identical results.
+
+    ``bucket_cap`` bounds the per-(source, dest) shuffle buckets of the
+    distributed path; the default (local rows) can never drop a row, which
+    the bit-parity guarantee needs — tighter caps trade memory for counted
+    overflow (surfaced in the result diagnostics).
+    """
 
     def __init__(self, *, batch_slots: int = 4,
                  cost_model: Optional[CostModel] = None,
-                 sigma_registry: Optional[SigmaRegistry] = None):
+                 sigma_registry: Optional[SigmaRegistry] = None,
+                 mesh=None, join_axes: Optional[Sequence[str]] = None,
+                 bucket_cap: Optional[int] = None,
+                 filter_cache_entries: int = 256):
         self.batch_slots = batch_slots
         self.cost_model = cost_model
         self.sigma = SigmaRegistry() if sigma_registry is None \
             else sigma_registry
         self.queue: list[JoinRequest] = []
         self.datasets: dict[str, list[Relation]] = {}
+        self._dataset_fps: dict[str, list[str]] = {}
         self._exec_cache: dict = {}
+        # LRU of (fingerprint, num_blocks, seed) -> words: bounded so a
+        # long-running server with ever-fresh seeds cannot accumulate
+        # device-resident filter words without limit
+        self._filter_words: OrderedDict = OrderedDict()
+        self.filter_cache_entries = filter_cache_entries
         self.diagnostics = ServerDiagnostics()
+        self.mesh = mesh
+        self.bucket_cap = bucket_cap
+        if mesh is not None:
+            axes = tuple(join_axes) if join_axes is not None \
+                else tuple(mesh.axis_names)
+            assert all(a in mesh.axis_names for a in axes), (axes, mesh)
+            self.join_axes = axes
+            self.mesh_k = 1
+            for a in axes:
+                self.mesh_k *= mesh.shape[a]
+            self.mesh_shape = tuple((a, mesh.shape[a]) for a in axes)
+            self.diagnostics.per_device_shuffled_bytes = np.zeros(
+                self.mesh_k, np.float64)
+        else:
+            self.join_axes = ()
+            self.mesh_k = 1
+            self.mesh_shape = ()
 
     # -- admission ----------------------------------------------------------
 
+    def _admit_rels(self, rels: Sequence[Relation]) -> list[Relation]:
+        rels = [bucket_to_pow2(r, minimum=self.mesh_k) for r in rels]
+        if self.mesh is not None:
+            rels = [shard_to_mesh(r, self.mesh, self.join_axes) for r in rels]
+        return rels
+
     def register_dataset(self, name: str, rels: Sequence[Relation]) -> None:
-        """Store a named (bucketed) dataset tenants can join by handle."""
-        self.datasets[name] = [bucket_to_pow2(r) for r in rels]
+        """Store a named (bucketed, mesh-sharded) dataset for handle queries.
+
+        Fingerprints are taken here, once — N steps over the dataset build
+        its Bloom filter words exactly once per ``(num_blocks, seed)``, and
+        re-registering identical relations under a new name reuses the same
+        cached words.
+        """
+        self.datasets[name] = self._admit_rels(rels)
+        self._dataset_fps[name] = [fingerprint(r) for r in self.datasets[name]]
 
     def submit(self, req: JoinRequest) -> JoinRequest:
         if req.rels is None:
             if req.dataset is None:
                 raise ValueError("JoinRequest needs rels or a dataset handle")
             req.rels = self.datasets[req.dataset]
+            req._fps = self._dataset_fps[req.dataset]
         else:
-            req.rels = [bucket_to_pow2(r) for r in req.rels]
+            # inline relations are NOT fingerprinted: hashing every ad-hoc
+            # submission would put a device_get + sha1 of the whole key set
+            # on the admission hot path to feed a cache that only pays off
+            # for repeated identical key sets — that contract belongs to
+            # register_dataset.  Their filter words build per step, uncached.
+            req.rels = self._admit_rels(req.rels)
+            req._fps = [None] * len(req.rels)
         if len(req.rels) < 2:
             raise ValueError("join needs at least two relations")
         if req.expr not in EXPRS:
@@ -189,14 +284,15 @@ class JoinServer:
             raise ValueError("JoinServer needs a concrete b_max "
                              f"(e.g. the default {DEFAULT_B_MAX}); the "
                              "adaptive b_max=None grid is driver-side only")
-        req._class = shape_class_of(req)
+        req._class = shape_class_of(
+            req, () if req.use_kernels else self.mesh_shape)
         req._submit_t = time.perf_counter()
         self.queue.append(req)
         return req
 
-    # -- executable cache ---------------------------------------------------
+    # -- executable + filter-word caches ------------------------------------
 
-    def _executable(self, stage: str, cls: ShapeClass, variant, builder):
+    def _executable(self, stage: str, cls, variant, builder):
         """Fetch-or-build a compiled executable; ``variant`` is the rest of
         the cache key (batch bucket for vmapped stages, seed for the
         static-seed kernel route).  Returns (fn, freshly_built)."""
@@ -210,6 +306,41 @@ class JoinServer:
         else:
             self.diagnostics.cache_hits += 1
         return fn, fresh
+
+    def _words_for(self, rel: Relation, fp: Optional[str], num_blocks: int,
+                   seed: int) -> jnp.ndarray:
+        """Per-relation dataset-filter words, built once per (fp, nb, seed).
+
+        ``fp=None`` (inline relations) always builds — no cache entry.  On a
+        mesh the build runs sharded (local build + OR-reduce) and the cached
+        words are replicated — bit-identical to a single-device build.
+        """
+        key = (fp, num_blocks, seed)
+        if fp is not None:
+            words = self._filter_words.get(key)
+            if words is not None:
+                self._filter_words.move_to_end(key)
+                self.diagnostics.filter_cache_hits += 1
+                return words
+        t0 = time.perf_counter()
+        if self.mesh is not None:
+            build, _ = self._executable(
+                "fbuild", (rel.capacity, num_blocks, self.mesh_shape), None,
+                partial(make_serve_filter_build, self.mesh, self.join_axes,
+                        num_blocks=num_blocks))
+        else:
+            build, _ = self._executable(
+                "fbuild", (rel.capacity, num_blocks), None,
+                partial(_make_filter_build, num_blocks))
+        words = build(rel.keys, rel.valid, jnp.uint32(seed))
+        jax.block_until_ready(words)
+        if fp is not None:
+            self._filter_words[key] = words
+            while len(self._filter_words) > self.filter_cache_entries:
+                self._filter_words.popitem(last=False)
+        self.diagnostics.filter_builds += 1
+        self.diagnostics.filter_build_s += time.perf_counter() - t0
+        return words
 
     # -- engine -------------------------------------------------------------
 
@@ -252,8 +383,14 @@ class JoinServer:
         # seed — keying the cache entry on the seed keeps the compile/hit
         # counters honest about that.
         self._executable("kernel", cls, req.seed, lambda: approx_join)
+        rels = req.rels
+        if self.mesh is not None:
+            # the Pallas kernels are single-device: gather mesh-sharded rows
+            # back to the default device for this query
+            rels = [Relation(*(jnp.asarray(np.asarray(jax.device_get(x)))
+                               for x in r)) for r in rels]
         req.result = approx_join(
-            req.rels, req.budget, agg=req.agg, expr=req.expr, seed=req.seed,
+            rels, req.budget, agg=req.agg, expr=req.expr, seed=req.seed,
             fp_rate=req.fp_rate, max_strata=cls.max_strata, b_max=cls.b_max,
             cost_model=self.cost_model, sigma_registry=self.sigma,
             query_id=req.query_id, dedup=req.dedup, use_kernels=True)
@@ -263,8 +400,9 @@ class JoinServer:
         else:
             self.diagnostics.exact_queries += 1
 
-    def _run_batch(self, cls: ShapeClass, batch: list[JoinRequest]) -> None:
-        B = bucket_capacity(len(batch))                # pow2 batch bucket
+    def _batch_inputs(self, cls: ShapeClass, batch: list[JoinRequest]):
+        """Pad to the pow2 batch bucket; stack relations, words and seeds."""
+        B = bucket_capacity(len(batch))
         reqs = batch + [batch[-1]] * (B - len(batch))  # pad slots (discarded)
         rels_b = [Relation(jnp.stack([r.rels[s].keys for r in reqs]),
                            jnp.stack([r.rels[s].values for r in reqs]),
@@ -272,29 +410,18 @@ class JoinServer:
                   for s in range(cls.n_inputs)]
         seeds = jnp.asarray([r.seed for r in reqs], jnp.uint32)
         num_blocks = bloom.num_blocks_for(max(cls.caps), cls.fp_rate)
+        # words are fetched per REAL request only (pad slots replay the last
+        # request's words) so the build/reuse counters stay honest
+        per_req = [
+            jnp.stack([self._words_for(r.rels[s], r._fps[s], num_blocks,
+                                       r.seed) for s in range(cls.n_inputs)])
+            for r in batch]
+        words_b = jnp.stack(per_req + [per_req[-1]] * (B - len(batch)))
+        return B, rels_b, words_b, seeds, num_blocks
 
-        prepare, fresh = self._executable(
-            "prepare", cls, B, partial(_make_prepare, num_blocks,
-                                       cls.max_strata))
-        if fresh:
-            # warm the executable off the clock: d_filter feeds the latency
-            # cost function (§3.2), which models repeated query execution —
-            # charging one-off trace+compile seconds would zero out every
-            # latency budget on the first batch of a shape class.
-            jax.block_until_ready(prepare(rels_b, seeds).strata.counts)
-        t0 = time.perf_counter()
-        prep = prepare(rels_b, seeds)
-        jax.block_until_ready(prep.strata.counts)
-        d_filter = time.perf_counter() - t0
-        self.diagnostics.filter_s += d_filter
-
-        population = np.asarray(jax.device_get(prep.population))
-        skeys = np.asarray(jax.device_get(prep.strata.keys))
-
-        def slice_i(i):
-            return jax.tree_util.tree_map(lambda x: x[i], prep.strata)
-
-        # -- host decisions: exact-affordable? b_i from budget + sigma ------
+    def _decide_b_rows(self, cls: ShapeClass, batch, B, population, skeys,
+                       strata_slice, d_filter):
+        """Host decisions: exact-affordable?  b_i from budget + sigma."""
         sampled_idx, b_rows = [], []
         zeros_b = jnp.zeros((cls.max_strata,), jnp.float32)
         for i, req in enumerate(batch):
@@ -311,32 +438,21 @@ class JoinServer:
             if budget.error is not None and self.sigma.has(req.query_id):
                 sigma = self.sigma.lookup(req.query_id, skeys[i])
             b_rows.append(decide_sample_sizes(
-                budget, slice_i(i), self.cost_model, d_filter, sigma,
+                budget, strata_slice(i), self.cost_model, d_filter, sigma,
                 budget.confidence))
             sampled_idx.append(i)
         exact_idx = [i for i in range(len(batch)) if i not in sampled_idx]
         b_rows += [zeros_b] * (B - len(batch))
+        return sampled_idx, exact_idx, b_rows
 
-        # -- fused device dispatches (per stage, whole batch) ---------------
-        value = err = cnt = dof = stats = None
-        if sampled_idx:
-            sample, _ = self._executable(
-                "sample", cls, B, partial(_make_sample, cls.b_max, cls.agg,
-                                          cls.dedup, cls.confidence, cls.expr))
-            value, err, cnt, dof, stats = sample(
-                prep.sorted_rels, prep.strata, jnp.stack(b_rows),
-                seeds + jnp.uint32(1))
-        if exact_idx:
-            exact, _ = self._executable(
-                "exact", cls, B, partial(_make_exact, cls.agg, cls.expr))
-            e_est, e_cnt = exact(prep.sorted_rels, prep.strata)
-
-        # -- per-query results + sigma feedback -----------------------------
-        fbytes = num_blocks * bloom.WORDS_PER_BLOCK * 4
-        n = cls.n_inputs
+    def _finish_batch(self, batch, *, strata_slice, live_counts, total_counts,
+                      fbytes, d_filter, exact_idx, e_est, e_cnt,
+                      value, err, cnt, dof, stats, skeys):
+        """Per-query results + sigma feedback (shared by both backends)."""
+        n = batch[0]._class.n_inputs
         for i, req in enumerate(batch):
-            strata_i = slice_i(i)
-            live_i, tot_i = prep.live_counts[i], prep.total_counts[i]
+            strata_i = strata_slice(i)
+            live_i, tot_i = live_counts[i], total_counts[i]
             diag = dict(
                 total_counts=tot_i, live_counts=live_i,
                 overlap_fraction=jnp.sum(live_i)
@@ -368,3 +484,97 @@ class JoinServer:
                 stats_i.valid & (stats_i.n_sampled > 1)))
             self.sigma.update(req.query_id, skeys[i], sig, ok)
             self.diagnostics.sampled_queries += 1
+
+    def _stage_builders(self, cls: ShapeClass, num_blocks: int):
+        """Per-backend stage builders + dispatch-argument adapters.
+
+        The single-device and mesh paths share every other line of the step
+        (warmup, timing, host decisions, result assembly); only the compiled
+        stage programs and two extra sample/exact arguments differ.
+        """
+        if self.mesh is None:
+            return dict(
+                prepare=partial(_make_prepare, cls.max_strata),
+                sample=partial(_make_sample, cls.b_max, cls.agg, cls.dedup,
+                               cls.confidence, cls.expr),
+                exact=partial(_make_exact, cls.agg, cls.expr),
+                sample_args=lambda prep, b, s: (prep.sorted_rels, prep.strata,
+                                                b, s),
+                exact_args=lambda prep: (prep.sorted_rels, prep.strata))
+        cap = self.bucket_cap or max(cls.caps) // self.mesh_k
+        return dict(
+            prepare=partial(make_serve_prepare, self.mesh, self.join_axes,
+                            n_rels=cls.n_inputs, num_blocks=num_blocks,
+                            max_strata=cls.max_strata, bucket_cap=cap),
+            sample=partial(make_serve_sample, self.mesh, self.join_axes,
+                           n_rels=cls.n_inputs, b_max=cls.b_max, agg=cls.agg,
+                           dedup=cls.dedup, confidence=cls.confidence,
+                           expr=cls.expr),
+            exact=partial(make_serve_exact, self.mesh, self.join_axes,
+                          n_rels=cls.n_inputs, agg=cls.agg, expr=cls.expr),
+            sample_args=lambda prep, b, s: (prep.sorted_rels,
+                                            prep.local_strata,
+                                            prep.strata.keys,
+                                            prep.strata.valid, b, s),
+            exact_args=lambda prep: (prep.sorted_rels, prep.local_strata,
+                                     prep.strata))
+
+    def _run_batch(self, cls: ShapeClass, batch: list[JoinRequest]) -> None:
+        """One engine step — single fused dispatch per stage; with a mesh,
+        each dispatch spans all devices through the shard_map pipeline."""
+        B, rels_b, words_b, seeds, num_blocks = \
+            self._batch_inputs(cls, batch)
+        builders = self._stage_builders(cls, num_blocks)
+
+        prepare, fresh = self._executable("prepare", cls, B,
+                                          builders["prepare"])
+        if fresh:
+            # warm the executable off the clock: d_filter feeds the latency
+            # cost function (§3.2), which models repeated query execution —
+            # charging one-off trace+compile seconds would zero out every
+            # latency budget on the first batch of a shape class.
+            jax.block_until_ready(
+                prepare(rels_b, words_b, seeds).strata.counts)
+        t0 = time.perf_counter()
+        prep = prepare(rels_b, words_b, seeds)
+        jax.block_until_ready(prep.strata.counts)
+        d_filter = time.perf_counter() - t0
+        self.diagnostics.filter_s += d_filter
+
+        population = np.asarray(jax.device_get(prep.population))
+        skeys = np.asarray(jax.device_get(prep.strata.keys))
+
+        def slice_i(i):
+            return jax.tree_util.tree_map(lambda x: x[i], prep.strata)
+
+        sampled_idx, exact_idx, b_rows = self._decide_b_rows(
+            cls, batch, B, population, skeys, slice_i, d_filter)
+
+        # -- fused device dispatches (per stage, whole batch) ---------------
+        value = err = cnt = dof = stats = e_est = e_cnt = None
+        if sampled_idx:
+            sample, _ = self._executable("sample", cls, B,
+                                         builders["sample"])
+            value, err, cnt, dof, stats = sample(*builders["sample_args"](
+                prep, jnp.stack(b_rows), seeds + jnp.uint32(1)))
+        if exact_idx:
+            exact, _ = self._executable("exact", cls, B, builders["exact"])
+            e_est, e_cnt = exact(*builders["exact_args"](prep))
+
+        self._finish_batch(
+            batch, strata_slice=slice_i, live_counts=prep.live_counts,
+            total_counts=prep.total_counts,
+            fbytes=num_blocks * bloom.WORDS_PER_BLOCK * 4, d_filter=d_filter,
+            exact_idx=exact_idx, e_est=e_est, e_cnt=e_cnt, value=value,
+            err=err, cnt=cnt, dof=dof, stats=stats, skeys=skeys)
+
+        if self.mesh is not None:
+            # measured per-device shuffle volume (the paper's data-movement
+            # reduction, observable from the server); pad slots excluded
+            n_real = len(batch)
+            self.diagnostics.dist_shuffled_tuple_bytes += float(
+                np.asarray(jax.device_get(
+                    prep.shuffled_tuple_bytes))[:n_real].sum())
+            self.diagnostics.per_device_shuffled_bytes += np.asarray(
+                jax.device_get(prep.device_shuffled_bytes))[:n_real].sum(
+                    axis=0)

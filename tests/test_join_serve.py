@@ -68,7 +68,9 @@ def test_cache_hits_increase_on_repeat_shape_class(rng):
     srv.submit(_req([r1, r2], QueryBudget(error=0.5), "a", seed=1))
     srv.run()
     first = srv.diagnostics.snapshot()
-    assert first["compiles"] >= 2 and first["cache_hits"] == 0
+    # >=3 executables compiled (filter build, prepare, sample); the only
+    # admissible hit so far is the second relation reusing the build exe
+    assert first["compiles"] >= 3 and first["cache_hits"] <= 1
     srv.submit(_req([r1, r2], QueryBudget(error=0.5), "a", seed=2))
     srv.run()
     second = srv.diagnostics.snapshot()
@@ -160,6 +162,47 @@ def test_dataset_handles_and_validation(rng):
         srv.submit(JoinRequest(budget=QueryBudget()))        # no rels
     with pytest.raises(ValueError):
         srv.submit(JoinRequest(rels=[r1, r2], agg="median"))  # unknown agg
+
+
+def test_dataset_filter_words_built_once(rng):
+    """Registered-dataset Bloom filter reuse: N steps over a dataset build
+    the filter words exactly once per (num_blocks, seed); re-registering
+    identical relations under a new name reuses the cache; a new seed (the
+    filter hash is seeded) builds fresh words."""
+    r1, r2 = make_pair(rng, n=1 << 11)
+    srv = JoinServer(batch_slots=1)        # force one step per query
+    srv.register_dataset("ds", [r1, r2])
+
+    def submit(name, qid, seed):
+        return srv.submit(JoinRequest(dataset=name,
+                                      budget=QueryBudget(error=0.5),
+                                      query_id=qid, seed=seed, max_strata=MS,
+                                      b_max=BM))
+
+    q = submit("ds", "t0", 7)
+    for i in range(1, 3):
+        submit("ds", f"t{i}", 7)
+    srv.run()
+    d = srv.diagnostics
+    assert d.steps == 3
+    assert d.filter_builds == 2            # one per relation, built once
+    assert d.filter_cache_hits == 4        # 2 later steps x 2 relations
+    # the cached-words path is still bit-identical to a direct driver call
+    direct = approx_join([r1, r2], QueryBudget(error=0.5), max_strata=MS,
+                         b_max=BM, seed=7)
+    assert _identical(q.result, direct)
+
+    # re-register the same relations under a new name: same fingerprints
+    srv.register_dataset("ds-again", [r1, r2])
+    submit("ds-again", "t3", 7)
+    srv.run()
+    assert srv.diagnostics.filter_builds == 2
+    assert srv.diagnostics.filter_cache_hits == 6
+
+    # a different seed hashes differently -> fresh words, once
+    submit("ds", "t4", 8)
+    srv.run()
+    assert srv.diagnostics.filter_builds == 4
 
 
 def test_kernel_route_served_per_query(rng):

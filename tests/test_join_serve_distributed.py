@@ -1,0 +1,153 @@
+"""Cross-mesh parity suite for the distributed JoinServer.
+
+The contract under test: a JoinServer constructed with a mesh of ANY size
+produces results bit-identical to (a) the single-device JoinServer and
+(b) direct ``distributed_approx_join`` calls, under the same seed — the
+shuffle routes every key to one device, received rows arrive in original
+row order, per-stratum statistics are computed by the owning device and
+merged back into the canonical [S] slot layout, so every float is the same.
+
+Runs in a SUBPROCESS with --xla_force_host_platform_device_count=8 so the
+rest of the suite keeps the real single-device backend.  Mesh sizes 1/2/4
+use device subsets of the 8 placeholder devices.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.budget import QueryBudget
+from repro.runtime.join_serve import JoinRequest, ShapeClass, shape_class_of
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax
+from jax.sharding import Mesh
+from repro.core.budget import QueryBudget
+from repro.core.distributed import distributed_approx_join
+from repro.core.relation import relation
+from repro.runtime.join_serve import JoinRequest, JoinServer
+
+MS, BM = 1024, 512
+rng = np.random.default_rng(0)
+n = 1 << 12
+r1 = relation(rng.integers(0, 500, n).astype(np.uint32),
+              rng.normal(10, 2, n).astype(np.float32))
+r2 = relation(rng.integers(400, 900, n).astype(np.uint32),
+              rng.normal(5, 1, n).astype(np.float32))
+
+
+def req(qid, seed, budget=None):
+    return JoinRequest(dataset="ds", budget=budget or QueryBudget(error=0.5),
+                       query_id=qid, seed=seed, max_strata=MS, b_max=BM)
+
+
+def surface(q):
+    r = q.result
+    return (float(r.estimate), float(r.error_bound), float(r.count),
+            float(r.dof))
+
+
+def serve(server):
+    qs = [server.submit(req("tA", 5)),                   # pilot round
+          server.submit(req("tB", 6)),
+          server.submit(req("tC", 7, QueryBudget())),    # exact path
+          server.submit(req("tA", 8))]                   # sigma round 2
+    server.run()
+    return [surface(q) for q in qs], qs
+
+
+ref_srv = JoinServer(batch_slots=2)
+ref_srv.register_dataset("ds", [r1, r2])
+ref, ref_qs = serve(ref_srv)
+
+# --- direct distributed_approx_join references (same seeds) ---------------
+for d in (1, 2, 4, 8):
+    mesh = Mesh(np.array(jax.devices()[:d]), ("data",))
+    dist = distributed_approx_join(mesh, [r1, r2], mode="exact",
+                                   max_strata=MS, seed=7)
+    assert float(dist.estimate) == ref[2][0], (d, "exact estimate")
+    assert float(dist.count) == ref[2][2], (d, "exact count")
+    samp = distributed_approx_join(mesh, [r1, r2], mode="sample",
+                                   sample_fraction=0.1, b_max=BM,
+                                   max_strata=MS, seed=5)
+    assert (float(samp.estimate), float(samp.error_bound),
+            float(samp.count), float(samp.dof)) == ref[0], (d, "sampled")
+print("DIRECT-PARITY-OK")
+
+# --- mesh servers: bit-identical results + sigma feedback ------------------
+for d in (1, 2, 4, 8):
+    mesh = Mesh(np.array(jax.devices()[:d]), ("data",))
+    srv = JoinServer(batch_slots=2, mesh=mesh)
+    srv.register_dataset("ds", [r1, r2])
+    got, qs = serve(srv)
+    assert got == ref, (d, got, ref)
+    assert srv.sigma.table == ref_srv.sigma.table, d
+    # diagnostics surfaces survive the distributed path
+    q = qs[0]
+    np.testing.assert_array_equal(
+        np.asarray(q.result.diagnostics.live_counts),
+        np.asarray(ref_qs[0].result.diagnostics.live_counts))
+    np.testing.assert_array_equal(np.asarray(q.result.strata.keys),
+                                  np.asarray(ref_qs[0].result.strata.keys))
+    d8 = srv.diagnostics
+    assert d8.per_device_shuffled_bytes.shape == (d,)
+    if d > 1:
+        assert d8.dist_shuffled_tuple_bytes > 0
+        assert all(b > 0 for b in d8.per_device_shuffled_bytes)
+print("SERVER-PARITY-OK")
+
+# --- mesh-keyed shape classes: warm then zero recompiles -------------------
+mesh = Mesh(np.array(jax.devices()), ("data",))
+srv = JoinServer(batch_slots=2, mesh=mesh)
+srv.register_dataset("ds", [r1, r2])
+for q in range(2):   # warmup covers (fbuild, prepare, sample, exact) x B
+    srv.submit(req(f"w{q}", 11))
+    srv.submit(req(f"we{q}", 11, QueryBudget()))
+srv.run()
+warm = srv.diagnostics.snapshot()
+assert warm["compiles"] >= 4, warm
+for q in range(4):
+    srv.submit(req(f"m{q}", 11))
+    srv.submit(req(f"me{q}", 11, QueryBudget()))
+srv.run()
+after = srv.diagnostics.snapshot()
+assert after["compiles"] == warm["compiles"], (warm, after)
+assert after["cache_hits"] > warm["cache_hits"]
+# dataset filter words were built once per relation for seed 11 and reused
+assert after["filter_builds"] == warm["filter_builds"]
+assert after["filter_cache_hits"] > warm["filter_cache_hits"]
+print("CACHE-OK")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_server_parity_1_2_4_8():
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stderr[-3000:]
+    for marker in ("DIRECT-PARITY-OK", "SERVER-PARITY-OK", "CACHE-OK"):
+        assert marker in out.stdout, (marker, out.stdout[-2000:])
+
+
+def test_shape_class_keys_on_mesh_shape(rng):
+    """Same query admitted on different mesh shapes lands in different
+    executable-cache classes (no cross-mesh executable collisions)."""
+    from conftest import make_pair
+    r1, r2 = make_pair(rng, n=1 << 10)
+    req = JoinRequest(rels=[r1, r2], budget=QueryBudget(error=0.5),
+                      max_strata=512, b_max=128)
+    single = shape_class_of(req)
+    mesh8 = shape_class_of(req, (("data", 8),))
+    mesh2x4 = shape_class_of(req, (("pod", 2), ("data", 4)))
+    assert single.mesh == ()
+    assert len({single, mesh8, mesh2x4}) == 3
+    assert isinstance(single, ShapeClass)
+    # everything but the mesh key is identical
+    assert single._replace(mesh=(("data", 8),)) == mesh8
