@@ -7,11 +7,17 @@ the engine must (a) batch same-class queries into fused dispatches and
 here, which makes this bench the compiled-executable-reuse regression gate.
 
 ``--distributed`` additionally serves the same workload through the mesh
-pipeline at 1/2/4/8 host-platform devices, reporting q/s, measured
-per-device shuffled bytes, and the per-dataset Bloom-filter-reuse counter
-(one build per registered relation across the whole multi-step run —
-asserted).  Re-execs itself under
-``--xla_force_host_platform_device_count=8`` when needed:
+pipeline at 1/2/4/8 host-platform devices — in BOTH serve modes
+(exact-parity gather merge vs psum merge with capacity-planned buckets) —
+reporting q/s, measured per-device shuffled bytes, the static per-device
+wire-bytes model, dropped-tuple counts, and the per-dataset
+Bloom-filter-reuse counter (one build per registered relation across the
+whole multi-step run — asserted).  At every mesh size > 1 the psum mode's
+wire bytes must be STRICTLY below the gather mode's (asserted: that is the
+point of the capacity-planned serve path).  The full row set is written to
+``BENCH_serve.json`` so the serving perf trajectory is recorded per run.
+Re-execs itself under ``--xla_force_host_platform_device_count=8`` when
+needed:
 
   PYTHONPATH=src python -m benchmarks.serve_bench --distributed
 """
@@ -101,14 +107,15 @@ def run() -> list[dict]:
     ]
 
 
-def _run_distributed_leg(devices: int) -> dict:
+def _run_distributed_leg(devices: int,
+                         serve_mode: str = "exact-parity") -> dict:
     """Serve one dataset-handle workload on a ``devices``-wide mesh."""
     import jax
     import numpy as np
     from jax.sharding import Mesh
 
     mesh = Mesh(np.array(jax.devices()[:devices]), ("data",))
-    server = JoinServer(batch_slots=SLOTS, mesh=mesh)
+    server = JoinServer(batch_slots=SLOTS, mesh=mesh, serve_mode=serve_mode)
     for tenant, rels in _workload(seed=7).items():
         server.register_dataset(tenant, rels)
 
@@ -142,22 +149,48 @@ def _run_distributed_leg(devices: int) -> dict:
     assert d.filter_builds == 4, d.filter_builds
     assert d.filter_cache_hits > 0
     served = d.queries - warm["queries"]
-    return row("serve", mode=f"mesh{devices}", queries=served,
+    return row("serve", mode=f"mesh{devices}/{serve_mode}", queries=served,
                seconds=round(dt, 3), qps=round(served / dt, 2),
                recompiles_after_warmup=recompiles,
                filter_builds=d.filter_builds,
                filter_cache_hits=d.filter_cache_hits,
                shuffled_bytes_total=round(d.dist_shuffled_tuple_bytes),
                per_device_shuffled_bytes=[
-                   int(round(float(b))) for b in d.per_device_shuffled_bytes])
+                   int(round(float(b))) for b in d.per_device_shuffled_bytes],
+               wire_bytes_model=round(d.dist_wire_bytes_model),
+               dropped_tuples=round(d.dist_dropped_tuples),
+               per_device_dropped_tuples=[
+                   int(round(float(b)))
+                   for b in d.per_device_dropped_tuples])
+
+
+def _all_distributed_legs() -> list[dict]:
+    return [_run_distributed_leg(devices, serve_mode)
+            for devices in MESH_SIZES
+            for serve_mode in ("exact-parity", "psum")]
+
+
+def _check_psum_beats_gather(rows: list[dict]) -> None:
+    """The capacity-planned psum path must put strictly fewer bytes on the
+    wire than the gather-merge path at every mesh size > 1, without
+    uncounted losses (exact-parity legs may never drop)."""
+    by_mode = {r["mode"]: r for r in rows if r["mode"].startswith("mesh")}
+    for devices in MESH_SIZES:
+        gather = by_mode[f"mesh{devices}/exact-parity"]
+        psum = by_mode[f"mesh{devices}/psum"]
+        assert gather["dropped_tuples"] == 0, gather
+        if devices > 1:
+            assert psum["wire_bytes_model"] < gather["wire_bytes_model"], \
+                (devices, psum["wire_bytes_model"],
+                 gather["wire_bytes_model"])
 
 
 def run_distributed() -> list[dict]:
-    """q/s + per-device shuffled bytes at 1/2/4/8 host-platform devices.
+    """q/s + shuffle meters at 1/2/4/8 host devices, both serve modes.
 
     Spawns a child with ``--xla_force_host_platform_device_count=8`` when
     this process has fewer devices (the flag must precede jax init); the
-    child emits one JSON row per mesh size on stdout.
+    child emits one JSON row per (mesh size, serve mode) on stdout.
     """
     import jax
     if jax.device_count() < max(MESH_SIZES):
@@ -171,20 +204,28 @@ def run_distributed() -> list[dict]:
              "--distributed-child"],
             env=env, capture_output=True, text=True, timeout=3600)
         assert out.returncode == 0, out.stderr[-3000:]
-        return [json.loads(line) for line in out.stdout.splitlines()
+        rows = [json.loads(line) for line in out.stdout.splitlines()
                 if line.startswith("{")]
-    return [_run_distributed_leg(devices) for devices in MESH_SIZES]
+    else:
+        rows = _all_distributed_legs()
+    _check_psum_beats_gather(rows)
+    return rows
 
 
 def main() -> None:
     from benchmarks.common import print_rows
     if "--distributed-child" in sys.argv:
-        for r in [_run_distributed_leg(d) for d in MESH_SIZES]:
+        for r in _all_distributed_legs():
             print(json.dumps(r), flush=True)
         return
     rows = run()
     if "--distributed" in sys.argv:
         rows += run_distributed()
+        # the artifact that records the serving perf trajectory per run:
+        # q/s, per-device shuffled bytes, wire-model bytes, dropped tuples
+        with open("BENCH_serve.json", "w") as fh:
+            json.dump(rows, fh, indent=1)
+        print("wrote BENCH_serve.json")
     print_rows(rows)
 
 

@@ -45,6 +45,7 @@ Everything is static-shape: the shuffle uses capacity-bounded buckets
 from __future__ import annotations
 
 import functools
+import math
 from typing import NamedTuple, Optional, Sequence
 
 import jax
@@ -55,8 +56,10 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core import bloom
 from repro.core.budget import QueryBudget
 from repro.core.cost import CostModel, fraction_for_latency
-from repro.core.estimators import (StratumStats, clt_finish, clt_sum_parts,
-                                   SumParts)
+from repro.core.estimators import (HTParts, StratumStats, clt_avg_from,
+                                   clt_count, clt_finish, clt_stdev_from,
+                                   clt_sum_parts, ht_finish, ht_sum_parts,
+                                   second_moment_stats, SumParts)
 from repro.core.hashing import hash2, u32
 from repro.core.join import (EXPRS, TUPLE_BYTES, estimate_stage,
                              exact_stage_from_sums, _pilot_sizes)
@@ -83,6 +86,29 @@ class DistJoinResult(NamedTuple):
     total_population: jnp.ndarray
     sample_draws: jnp.ndarray
     device_shuffled_bytes: jnp.ndarray  # [k] per-device sent-tuple bytes
+    device_dropped: jnp.ndarray         # [k] per-device bucket-dropped tuples
+
+
+def planned_bucket_cap(local_rows: int, k: int, overlap: float, *,
+                       slack: float = 2.0, floor: int = 8) -> int:
+    """Capacity-planned shuffle bucket size from a live-fraction estimate.
+
+    The filter's shuffle saving only reaches the wire of a static-shape
+    dataflow if the all_to_all buffers shrink with it: size the per-(source,
+    dest) bucket for the *expected live* rows — ``local_rows * overlap / k``
+    with ``slack``x headroom — instead of the lossless worst case
+    (``local_rows``).  Small buckets get a ``3 sqrt(2 mean)`` concentration
+    guard instead: keys place hash-randomly but rows arrive in per-key
+    clumps, so the per-bucket load is compound-Poisson with variance ~
+    ``2 mean``, and a plain multiplicative slack under-provisions exactly
+    when buckets are a handful of rows (at production bucket sizes the
+    guard is the smaller term and the plan stays ``slack * mean``).
+    Overflow beyond the plan is counted, never silent — the feedback path
+    for recompile-bigger elastic re-runs.
+    """
+    mean = local_rows * overlap / max(k, 1)
+    guard = max((slack - 1.0) * mean, 3.0 * math.sqrt(max(2.0 * mean, 0.0)))
+    return max(int(mean + guard), floor)
 
 
 def axis_size(a: str):
@@ -256,6 +282,7 @@ class DistPrepareOut(NamedTuple):
     shuffled_tuple_bytes: jnp.ndarray   # f32 [] global live bytes moved
     device_shuffled_bytes: jnp.ndarray  # f32 [k] per-device bytes sent
     bucket_overflow: jnp.ndarray        # int32 [] global dropped rows
+    device_dropped: jnp.ndarray         # int32 [k] per-device dropped rows
     filter_bytes: jnp.ndarray           # f32 [] filter traffic (model)
 
 
@@ -316,7 +343,11 @@ def dist_prepare_stage(rels: Sequence[Relation], num_blocks: int,
     my_sent = (sum(sent_counts) * TUPLE_BYTES).astype(jnp.float32)
     device_sent = gather_concat(my_sent[None], axes)             # [k]
     sent_bytes = jnp.sum(device_sent)
-    bucket_overflow = jax.lax.psum(sum(overflows), axes)
+    # dropped tuples are counted at the SENDING device (rows beyond the
+    # bucket plan never leave it) — surfaced per device, never silent
+    my_dropped = jnp.asarray(sum(overflows), jnp.int32)
+    device_dropped = gather_concat(my_dropped[None], axes)       # [k]
+    bucket_overflow = jnp.sum(device_dropped)
 
     sorted_rels = [sort_by_key(r) for r in shuffled]
     local_strata = build_strata(sorted_rels, max_strata)
@@ -329,14 +360,15 @@ def dist_prepare_stage(rels: Sequence[Relation], num_blocks: int,
                               live_counts, total_counts,
                               local_strata.population,
                               sent_bytes, device_sent, bucket_overflow,
-                              fbytes)
+                              device_dropped, fbytes)
     merged = merge_strata(local_strata, axes, max_strata)
     # replicate the (scalar) global overflow into the local strata too, so
     # both pytrees flowing out of a shard_map stage are well-defined
     local_strata = local_strata._replace(overflow=merged.overflow)
     return DistPrepareOut(sorted_rels, local_strata, merged,
                           live_counts, total_counts, merged.population,
-                          sent_bytes, device_sent, bucket_overflow, fbytes)
+                          sent_bytes, device_sent, bucket_overflow,
+                          device_dropped, fbytes)
 
 
 def dist_exact_stage(sorted_rels: Sequence[Relation], local_strata: Strata,
@@ -398,6 +430,67 @@ def _psum_parts(parts: SumParts, axes) -> SumParts:
     return SumParts(*[jax.lax.psum(x, axes) for x in parts])
 
 
+def dist_exact_stage_psum(sorted_rels: Sequence[Relation],
+                          local_strata: Strata, axes: Sequence[str], *,
+                          agg: str = "sum", expr: str = "sum"):
+    """Exact path, paper dataflow: per-device totals merged by one psum.
+
+    Strata are device-complete after the shuffle, so per-device exact
+    aggregates ADD across devices — no strata gather, no canonical re-slot.
+    Results agree with the gather merge up to float reassociation.
+    """
+    exact_fn = {"sum": exact_sum_of_sums,
+                "product": exact_sum_of_products}[expr]
+    est = jax.lax.psum(exact_fn(sorted_rels, local_strata), axes)
+    cnt = jax.lax.psum(exact_count(local_strata), axes)
+    if agg == "count":
+        est = cnt
+    elif agg == "avg":
+        est = est / jnp.maximum(cnt, 1.0)
+    return est, cnt
+
+
+def dist_sample_stage_psum(sorted_rels: Sequence[Relation],
+                           local_strata: Strata, b_local: jnp.ndarray,
+                           b_max: int, seed, axes: Sequence[str], *,
+                           agg: str = "sum", dedup: bool = False,
+                           confidence: float = 0.95, f_fn=None):
+    """Stages 4-6, paper dataflow (§3.3-III): local draws, psum'd parts.
+
+    ``b_local`` is the per-stratum budget in THIS device's slot layout
+    (the driver decides over the concatenation of per-device strata and
+    each device receives its slice).  Every estimator is a sum of
+    per-stratum terms and strata are device-complete, so the merge is a
+    single psum of the sufficient parts — the cheapest collective the mesh
+    offers, at the cost of bit-parity with the single-device pipeline
+    (statistical equivalence is what the accuracy gate asserts).
+    """
+    f = EXPRS["sum"][0] if f_fn is None else f_fn
+    sample = sample_edges(sorted_rels, local_strata,
+                          jnp.asarray(b_local, jnp.float32), b_max, seed, f)
+    st = sample.stats
+    cnt = jax.lax.psum(clt_count(st), axes)
+    if dedup:
+        parts = HTParts(*[jax.lax.psum(x, axes) for x in
+                          ht_sum_parts(st, sample.unique_f,
+                                       sample.unique_count)])
+        est = ht_finish(parts, confidence)
+    else:
+        parts = _psum_parts(clt_sum_parts(st), axes)
+        if agg == "avg":
+            est = clt_avg_from(parts, confidence)
+        elif agg == "stdev":
+            tau2 = jax.lax.psum(clt_sum_parts(second_moment_stats(st)).tau,
+                                axes)
+            est = clt_stdev_from(parts, tau2, confidence)
+        else:
+            est = clt_finish(parts, confidence)
+    value = cnt if agg == "count" else est.estimate
+    err = jnp.zeros_like(est.error_bound) if agg == "count" \
+        else est.error_bound
+    return value, err, cnt, est.dof, st
+
+
 def make_distributed_join(mesh: Mesh,
                           *,
                           n_rels: int,
@@ -436,8 +529,6 @@ def make_distributed_join(mesh: Mesh,
     for a in axes:
         k *= mesh.shape[a]
     f_fn, _ = EXPRS[expr]
-    exact_fn = {"sum": exact_sum_of_sums,
-                "product": exact_sum_of_products}[expr]
     if budget is not None and budget.latency_s is not None:
         assert cost_model is not None
     assert merge in ("gather", "psum"), merge
@@ -465,13 +556,14 @@ def make_distributed_join(mesh: Mesh,
             strata_overflow=prep.strata.overflow,
             total_population=total_pop,
             device_shuffled_bytes=prep.device_shuffled_bytes,
+            device_dropped=prep.device_dropped,
         )
 
         if mode == "exact":
             if merge == "psum":
-                est = jax.lax.psum(exact_fn(prep.sorted_rels,
-                                            prep.local_strata), axes)
-                cnt = jax.lax.psum(exact_count(prep.local_strata), axes)
+                est, cnt = dist_exact_stage_psum(prep.sorted_rels,
+                                                 prep.local_strata, axes,
+                                                 agg="sum", expr=expr)
             else:
                 est, cnt = dist_exact_stage(prep.sorted_rels,
                                             prep.local_strata, prep.strata,
@@ -495,13 +587,12 @@ def make_distributed_join(mesh: Mesh,
             # size b_i straight off each device's own strata — every local
             # stratum gets its budget (no global-[S] truncation)
             b_local = _pilot_sizes(prep.local_strata.population, s)
-            sample = sample_edges(prep.sorted_rels, prep.local_strata,
-                                  b_local, b_max, seed + 1, f_fn)
-            parts = _psum_parts(clt_sum_parts(sample.stats), axes)
-            est = clt_finish(parts, confidence)
-            return DistJoinResult(est.estimate, est.error_bound, parts.count,
-                                  est.dof,
-                                  sample_draws=parts.n_draws, **meters)
+            value, err, cnt, dof, st = dist_sample_stage_psum(
+                prep.sorted_rels, prep.local_strata, b_local, b_max,
+                seed + 1, axes, agg="sum", confidence=confidence, f_fn=f_fn)
+            return DistJoinResult(value, err, cnt, dof,
+                                  sample_draws=jax.lax.psum(
+                                      jnp.sum(st.n_sampled), axes), **meters)
         b_merged = _pilot_sizes(prep.population, s)
         value, err, cnt, dof, mstats = dist_sample_stage(
             prep.sorted_rels, prep.local_strata, prep.strata.keys,
@@ -555,7 +646,8 @@ def _local_strata_spec(axes):
 
 def make_serve_prepare(mesh: Mesh, axes: Sequence[str], *, n_rels: int,
                        num_blocks: int, max_strata: int,
-                       bucket_cap: Optional[int] = None):
+                       bucket_cap: Optional[int] = None,
+                       merge: str = "gather"):
     """Batched distributed prepare: ``(rels_b, words_b, seeds) -> prep``.
 
     ``rels_b``: list of Relations with fields ``[B, N]``, sharded over
@@ -563,26 +655,39 @@ def make_serve_prepare(mesh: Mesh, axes: Sequence[str], *, n_rels: int,
     prebuilt dataset-filter words.  Returns a :class:`DistPrepareOut` whose
     per-device members stay sharded (feed them straight into the sample /
     exact executables) and whose merged members are replicated.
+
+    ``merge='psum'`` skips the strata gather entirely: ``strata`` /
+    ``population`` come back SHARDED — the host sees the concatenation of
+    per-device strata (device d's slots at columns ``[d*S, (d+1)*S)``),
+    which is a complete, disjoint cover of the global strata (every key
+    lives on exactly one device after the shuffle), just not in the
+    canonical key-sorted order.  Host-side sample sizing works unchanged on
+    that layout; the psum sample/exact executables take each device's slice
+    back via the same sharding.
     """
     axes = tuple(axes)
+    assert merge in ("gather", "psum"), merge
 
     def per_query(flat, words, seed):
         rels = [Relation(*flat[3 * i: 3 * i + 3]) for i in range(n_rels)]
         return dist_prepare_stage(
             rels, num_blocks, max_strata, seed, axes, bucket_cap=bucket_cap,
-            filter_words=[words[i] for i in range(n_rels)])
+            filter_words=[words[i] for i in range(n_rels)], merge=merge)
 
     def batched(*args):
         return jax.vmap(per_query)(*args)
 
     flat_spec = tuple(P(None, axes) for _ in range(3 * n_rels))
+    strata_spec = _local_strata_spec(axes) if merge == "psum" \
+        else Strata(P(), P(), P(), P(), P())
     out_spec = DistPrepareOut(
         sorted_rels=_rel_specs(axes, n_rels),
         local_strata=_local_strata_spec(axes),
-        strata=Strata(P(), P(), P(), P(), P()),
-        live_counts=P(), total_counts=P(), population=P(),
+        strata=strata_spec,
+        live_counts=P(), total_counts=P(),
+        population=P(None, axes) if merge == "psum" else P(),
         shuffled_tuple_bytes=P(), device_shuffled_bytes=P(),
-        bucket_overflow=P(), filter_bytes=P())
+        bucket_overflow=P(), device_dropped=P(), filter_bytes=P())
     fn = shard_map(batched, mesh=mesh,
                    in_specs=(flat_spec, P(), P()),
                    out_specs=out_spec, check_rep=False)
@@ -654,6 +759,76 @@ def make_serve_exact(mesh: Mesh, axes: Sequence[str], *, n_rels: int,
         flat = tuple(x for r in sorted_rels
                      for x in (r.keys, r.values, r.valid))
         return fn(flat, lstrata, mstrata)
+
+    return run
+
+
+def make_serve_sample_psum(mesh: Mesh, axes: Sequence[str], *, n_rels: int,
+                           b_max: int, agg: str, dedup: bool,
+                           confidence: float, expr: str):
+    """Batched psum-merge sample+estimate executable.
+
+    ``b`` arrives in the concatenated per-device layout ``[B, k*S]`` (the
+    same layout ``make_serve_prepare(merge='psum')`` emitted its strata in);
+    sharding it over ``axes`` hands every device exactly its own slice.
+    Estimates come back replicated; the per-stratum stats stay sharded so
+    the host reads the same concatenated layout it sized ``b`` in.
+    """
+    axes = tuple(axes)
+    f_fn = EXPRS[expr][0]
+
+    def per_query(flat, lstrata, b_local, seed):
+        sorted_rels = [Relation(*flat[3 * i: 3 * i + 3])
+                       for i in range(n_rels)]
+        return dist_sample_stage_psum(sorted_rels, lstrata, b_local, b_max,
+                                      seed, axes, agg=agg, dedup=dedup,
+                                      confidence=confidence, f_fn=f_fn)
+
+    def batched(*args):
+        return jax.vmap(per_query)(*args)
+
+    flat_spec = tuple(P(None, axes) for _ in range(3 * n_rels))
+    sharded = P(None, axes)
+    stats_spec = StratumStats(sharded, sharded, sharded, sharded, sharded)
+    fn = shard_map(batched, mesh=mesh,
+                   in_specs=(flat_spec, _local_strata_spec(axes), sharded,
+                             P()),
+                   out_specs=(P(), P(), P(), P(), stats_spec),
+                   check_rep=False)
+
+    @jax.jit
+    def run(sorted_rels, lstrata, b, seeds):
+        flat = tuple(x for r in sorted_rels
+                     for x in (r.keys, r.values, r.valid))
+        return fn(flat, lstrata, b, seeds)
+
+    return run
+
+
+def make_serve_exact_psum(mesh: Mesh, axes: Sequence[str], *, n_rels: int,
+                          agg: str, expr: str):
+    """Batched psum-merge exact-path executable."""
+    axes = tuple(axes)
+
+    def per_query(flat, lstrata):
+        sorted_rels = [Relation(*flat[3 * i: 3 * i + 3])
+                       for i in range(n_rels)]
+        return dist_exact_stage_psum(sorted_rels, lstrata, axes,
+                                     agg=agg, expr=expr)
+
+    def batched(*args):
+        return jax.vmap(per_query)(*args)
+
+    flat_spec = tuple(P(None, axes) for _ in range(3 * n_rels))
+    fn = shard_map(batched, mesh=mesh,
+                   in_specs=(flat_spec, _local_strata_spec(axes)),
+                   out_specs=(P(), P()), check_rep=False)
+
+    @jax.jit
+    def run(sorted_rels, lstrata):
+        flat = tuple(x for r in sorted_rels
+                     for x in (r.keys, r.values, r.valid))
+        return fn(flat, lstrata)
 
     return run
 

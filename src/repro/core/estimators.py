@@ -122,11 +122,16 @@ def clt_count(stats: StratumStats) -> jnp.ndarray:
     return jnp.sum(_masked(stats.population, stats.valid))
 
 
+def clt_avg_from(parts: SumParts, confidence: float = 0.95) -> Estimate:
+    """AVG finish from psum-able parts (count is exact, CI just rescales)."""
+    s = clt_finish(parts, confidence)
+    n = jnp.maximum(parts.count, 1.0)
+    return Estimate(s.estimate / n, s.error_bound / n, s.variance / n**2, s.dof)
+
+
 def clt_avg(stats: StratumStats, confidence: float = 0.95) -> Estimate:
     """AVG = SUM / COUNT (count is exact, so the CI just rescales)."""
-    s = clt_sum(stats, confidence)
-    n = jnp.maximum(clt_count(stats), 1.0)
-    return Estimate(s.estimate / n, s.error_bound / n, s.variance / n**2, s.dof)
+    return clt_avg_from(clt_sum_parts(stats), confidence)
 
 
 def inclusion_probability(population, n_sampled):
@@ -137,6 +142,39 @@ def inclusion_probability(population, n_sampled):
     B = jnp.maximum(jnp.asarray(population, jnp.float32), 1.0)
     b = jnp.asarray(n_sampled, jnp.float32)
     return -jnp.expm1(b * jnp.log1p(-jnp.minimum(1.0 / B, 0.999999)))
+
+
+class HTParts(NamedTuple):
+    """psum-able pieces of the Horvitz-Thompson estimate (Eq. 15-17).
+
+    Strata sample independently, so every term is a sum of per-stratum
+    contributions — a distributed merge of device-complete strata is a
+    plain ADD, exactly like :class:`SumParts`.
+    """
+
+    tau: jnp.ndarray       # sum_i sum_{distinct e in i} f_e / pi_i
+    var: jnp.ndarray       # sum_i (1 - pi_i)/pi_i^2 * y_i^2
+    m_strata: jnp.ndarray  # number of contributing strata
+
+
+def ht_sum_parts(stats: StratumStats, unique_f: jnp.ndarray,
+                 unique_counts: jnp.ndarray) -> HTParts:
+    ok = stats.valid & (unique_counts > 0)
+    pi = inclusion_probability(stats.population, stats.n_sampled)
+    pi = jnp.where(ok, jnp.maximum(pi, 1e-9), 1.0)
+    tau = jnp.sum(_masked(unique_f / pi, ok))
+    # Var(HT) with independent strata: only the first term of Eq. 17 survives
+    # across strata (pi_ij = pi_i pi_j when strata sample independently);
+    # within a stratum we use the standard per-unit HT variance with the
+    # per-stratum aggregate y_i as the unit (paper's formulation).
+    var = jnp.sum(_masked((1.0 - pi) / pi**2 * unique_f**2, ok))
+    return HTParts(tau, var, jnp.sum(ok.astype(jnp.float32)))
+
+
+def ht_finish(parts: HTParts, confidence: float = 0.95) -> Estimate:
+    dof = jnp.maximum(parts.m_strata - 1.0, 1.0)
+    t = t_quantile(0.5 + confidence / 2.0, dof)
+    return Estimate(parts.tau, t * jnp.sqrt(parts.var), parts.var, dof)
 
 
 def horvitz_thompson_sum(stats: StratumStats, unique_f: jnp.ndarray,
@@ -152,32 +190,24 @@ def horvitz_thompson_sum(stats: StratumStats, unique_f: jnp.ndarray,
     (B_i / E[#distinct]) * y_i in expectation; we use the exact per-edge form:
     each distinct edge contributes f_e / pi_i.
     """
-    ok = stats.valid & (unique_counts > 0)
-    pi = inclusion_probability(stats.population, stats.n_sampled)
-    pi = jnp.where(ok, jnp.maximum(pi, 1e-9), 1.0)
-    tau = jnp.sum(_masked(unique_f / pi, ok))
-    # Var(HT) with independent strata: only the first term of Eq. 17 survives
-    # across strata (pi_ij = pi_i pi_j when strata sample independently);
-    # within a stratum we use the standard per-unit HT variance with the
-    # per-stratum aggregate y_i as the unit (paper's formulation).
-    var = jnp.sum(_masked((1.0 - pi) / pi**2 * unique_f**2, ok))
-    m = jnp.sum(ok.astype(jnp.float32))
-    dof = jnp.maximum(m - 1.0, 1.0)
-    t = t_quantile(0.5 + confidence / 2.0, dof)
-    return Estimate(tau, t * jnp.sqrt(var), var, dof)
+    return ht_finish(ht_sum_parts(stats, unique_f, unique_counts), confidence)
 
 
-def clt_stdev(stats: StratumStats, confidence: float = 0.95) -> Estimate:
-    """STDEV over the join output (the 4th aggregate of the paper's §2
-    interface): sqrt(E[f^2] - E[f]^2) with both moments estimated by the
-    stratified expansion estimator; the CI half-width follows by the delta
-    method from the SUM bounds (first-order)."""
-    n = jnp.maximum(clt_count(stats), 1.0)
-    s1 = clt_sum(stats, confidence)
-    # second-moment stats: reuse the machinery with f <- f^2
-    stats2 = stats._replace(sum_f=stats.sum_f2,
-                            sum_f2=jnp.zeros_like(stats.sum_f2))
-    tau2 = clt_sum_parts(stats2).tau
+def second_moment_stats(stats: StratumStats) -> StratumStats:
+    """Reuse the SUM machinery with f <- f^2 (feeds the STDEV estimator)."""
+    return stats._replace(sum_f=stats.sum_f2,
+                          sum_f2=jnp.zeros_like(stats.sum_f2))
+
+
+def clt_stdev_from(parts: SumParts, tau2: jnp.ndarray,
+                   confidence: float = 0.95) -> Estimate:
+    """STDEV finish from psum-able parts plus the second-moment total.
+
+    ``tau2`` is ``clt_sum_parts(second_moment_stats(stats)).tau`` — a plain
+    sum over strata, so it merges across devices by ADD like everything else.
+    """
+    n = jnp.maximum(parts.count, 1.0)
+    s1 = clt_finish(parts, confidence)
     m1 = s1.estimate / n
     m2 = tau2 / n
     var = jnp.maximum(m2 - m1 * m1, 0.0)
@@ -187,6 +217,16 @@ def clt_stdev(stats: StratumStats, confidence: float = 0.95) -> Estimate:
     bound = jnp.where(sd > 0, jnp.abs(m1) / jnp.maximum(sd, 1e-9) * dm1,
                       dm1)
     return Estimate(sd, bound, bound ** 2, s1.dof)
+
+
+def clt_stdev(stats: StratumStats, confidence: float = 0.95) -> Estimate:
+    """STDEV over the join output (the 4th aggregate of the paper's §2
+    interface): sqrt(E[f^2] - E[f]^2) with both moments estimated by the
+    stratified expansion estimator; the CI half-width follows by the delta
+    method from the SUM bounds (first-order)."""
+    return clt_stdev_from(clt_sum_parts(stats),
+                          clt_sum_parts(second_moment_stats(stats)).tau,
+                          confidence)
 
 
 def accuracy_loss(approx, exact):

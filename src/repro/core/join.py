@@ -52,6 +52,7 @@ class JoinDiagnostics(NamedTuple):
     sample_draws: jnp.ndarray       # sum_i b_i actually drawn
     d_filter_s: float               # measured wall time of stage 1-2
     sampled: bool                   # False -> exact path was taken
+    dist_dropped_tuples: float = 0.0  # mesh shuffle rows beyond bucket_cap
 
 
 class JoinResult(NamedTuple):

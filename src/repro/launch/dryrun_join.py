@@ -23,7 +23,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import bloom
-from repro.core.distributed import make_distributed_join
+from repro.core.distributed import make_distributed_join, planned_bucket_cap
 from repro.core.relation import Relation
 from repro.launch import roofline as RL
 from repro.launch.mesh import make_production_mesh
@@ -34,14 +34,16 @@ def run_join_cell(mesh, *, log2_rows: int, mode: str, filter_stage: bool,
                   overlap_hint: float = 1.0, verbose: bool = True) -> dict:
     """overlap_hint < 1 enables filter-informed capacity planning (§Perf
     paper-side iteration): the driver sizes the shuffle buckets from the
-    Bloom-estimated live fraction (2x slack) instead of the full input —
-    on a static-shape dataflow this is HOW the filter's shuffle saving
-    reaches the wire; overflow feeds the recompile-bigger elastic loop."""
+    Bloom-estimated live fraction (2x slack + small-bucket concentration
+    guard, ``core.distributed.planned_bucket_cap`` — the same planner the
+    JoinServer's psum serve mode uses) instead of the full input — on a
+    static-shape dataflow this is HOW the filter's shuffle saving reaches
+    the wire; overflow feeds the recompile-bigger elastic loop."""
     axes = tuple(mesh.shape)                   # the join uses every axis
     chips = int(np.prod(list(mesh.shape.values())))
     n_global = 1 << log2_rows
     local = n_global // chips
-    bucket_cap = max(int(2 * local * overlap_hint) // chips, 16)
+    bucket_cap = planned_bucket_cap(local, chips, overlap_hint, floor=16)
     max_strata = min(chips * bucket_cap, 1 << 16)
     num_blocks = bloom.num_blocks_for(local, fp_rate)  # per-shard filter
 

@@ -32,7 +32,8 @@ from repro.runtime.join_serve import JoinRequest, JoinServer
 
 
 def run(*, tenants: int = 4, queries_per_tenant: int = 8, slots: int = 4,
-        base_n: int = 1 << 12, seed: int = 0, mesh_devices: int = 0) -> dict:
+        base_n: int = 1 << 12, seed: int = 0, mesh_devices: int = 0,
+        serve_mode: str = "exact-parity") -> dict:
     mesh = None
     if mesh_devices:
         import jax
@@ -41,7 +42,7 @@ def run(*, tenants: int = 4, queries_per_tenant: int = 8, slots: int = 4,
         mesh = Mesh(np.array(jax.devices()[:mesh_devices]), ("data",))
     server = JoinServer(batch_slots=slots,
                         cost_model=CostModel(beta_compute=1e-7, epsilon=1e-3),
-                        mesh=mesh)
+                        mesh=mesh, serve_mode=serve_mode)
     budgets = [QueryBudget(error=0.5), QueryBudget(latency_s=0.5),
                QueryBudget()]
     for t in range(tenants):
@@ -76,6 +77,9 @@ def run(*, tenants: int = 4, queries_per_tenant: int = 8, slots: int = 4,
         per_dev = [f"{b:.0f}" for b in d.per_device_shuffled_bytes]
         print(f"  dist_shuffled_tuple_bytes={d.dist_shuffled_tuple_bytes:.0f}"
               f" per_device={per_dev}")
+        print(f"  serve_mode={serve_mode} "
+              f"wire_bytes_model={d.dist_wire_bytes_model:.0f} "
+              f"dropped_tuples={d.dist_dropped_tuples:.0f}")
     for r in reqs[:3]:
         print(f"  {r.query_id}: estimate={float(r.result.estimate):.1f} "
               f"+-{float(r.result.error_bound):.1f} "
@@ -92,6 +96,10 @@ def main() -> None:
     ap.add_argument("--base-n", type=int, default=1 << 12)
     ap.add_argument("--mesh", type=int, default=0,
                     help="serve distributed over N devices (0 = off)")
+    ap.add_argument("--serve-mode", default="exact-parity",
+                    choices=["exact-parity", "psum"],
+                    help="mesh merge strategy: bit-parity gather vs "
+                         "capacity-planned psum")
     args = ap.parse_args()
     if args.mesh:
         import jax
@@ -109,7 +117,8 @@ def main() -> None:
                 [sys.executable, "-m", "repro.launch.join_serve",
                  *sys.argv[1:]], env=env))
     run(tenants=args.tenants, queries_per_tenant=args.queries_per_tenant,
-        slots=args.slots, base_n=args.base_n, mesh_devices=args.mesh)
+        slots=args.slots, base_n=args.base_n, mesh_devices=args.mesh,
+        serve_mode=args.serve_mode)
 
 
 if __name__ == "__main__":

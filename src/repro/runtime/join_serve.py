@@ -33,6 +33,23 @@ canonical single-device slot layout before estimating, so a mesh of any size
 reproduces the single-device arithmetic exactly (asserted across mesh sizes
 1/2/4/8 in ``tests/test_join_serve_distributed.py``).
 
+That bit-parity merge is the expensive one: per-stratum stats all_gather to
+every device and the shuffle buckets default to the lossless worst case.  At
+cluster scale the server can instead run ``serve_mode='psum'``: per-device
+estimator parts merge with a single psum (the paper's own dataflow) and the
+shuffle buckets are CAPACITY-PLANNED from the Bloom-intersection overlap
+estimate taken at ``register_dataset`` time (the dry-run's overlap-hint
+trick) — so the filter's data-movement saving reaches the wire of the
+static-shape dataflow.  Rows beyond the plan are dropped *and counted*
+(``ServerDiagnostics.dist_dropped_tuples``, per device in
+``per_device_dropped_tuples``, per query in the result diagnostics).  psum
+results agree with exact-parity up to float reassociation; the guarantee is
+statistical, asserted by the accuracy gate (``tests/test_accuracy_gate.py``:
+CLT-bounded relative error, nominal CI coverage, allocation-faithful
+per-stratum draws, at mesh 1/2/4/8).  Shape classes key on
+``(serve_mode, bucket_cap)`` too, so the two modes never collide in the
+executable cache.
+
 Per-query dynamic decisions (exact-affordable?  per-stratum ``b_i`` from the
 budget + sigma feedback) stay on the host, exactly as in ``approx_join`` —
 the driver role.  Sigma feedback lands *between engine steps*: requests with
@@ -60,8 +77,12 @@ import numpy as np
 from repro.core import bloom
 from repro.core.budget import QueryBudget
 from repro.core.cost import CostModel, SigmaRegistry
-from repro.core.distributed import (make_serve_exact, make_serve_filter_build,
-                                    make_serve_prepare, make_serve_sample)
+from repro.core.distributed import (make_serve_exact, make_serve_exact_psum,
+                                    make_serve_filter_build,
+                                    make_serve_prepare, make_serve_sample,
+                                    make_serve_sample_psum,
+                                    planned_bucket_cap)
+from repro.core.estimators import SumParts
 from repro.core.join import (EXPRS, TUPLE_BYTES, JoinDiagnostics, JoinResult,
                              approx_join, decide_sample_sizes, exact_stage,
                              measured_sigma, prepare_stage_pre, sample_stage)
@@ -70,6 +91,28 @@ from repro.core.relation import (Relation, bucket_capacity, bucket_to_pow2,
 
 DEFAULT_B_MAX = 2048
 AGGS = ("sum", "count", "avg", "stdev")
+SERVE_MODES = ("exact-parity", "psum")
+
+
+def bloom_overlap_estimate(rels: Sequence[Relation], fp_rate: float = 0.01,
+                           seed: int = 0) -> float:
+    """Planning-time live-fraction estimate from the Bloom intersection.
+
+    Builds one filter per input, ANDs them, probes every input against the
+    join filter and returns surviving/total — the same estimate the dry-run
+    feeds as ``overlap_hint`` to size capacity-planned shuffle buckets.
+    Biased UP only (Bloom false positives), so a bucket plan with slack on
+    top of it errs on the lossless side.  One-off host-side work at dataset
+    registration; the serving hot path never pays it.
+    """
+    num_blocks = bloom.num_blocks_for(max(r.capacity for r in rels), fp_rate)
+    filters = [bloom.build(r.keys, r.valid, num_blocks, seed) for r in rels]
+    jf = bloom.intersect_all(filters)
+    live = sum(int(jax.device_get(jnp.sum(r.valid & bloom.contains(jf,
+                                                                   r.keys))))
+               for r in rels)
+    total = sum(int(jax.device_get(r.count())) for r in rels)
+    return live / max(total, 1)
 
 
 class ShapeClass(NamedTuple):
@@ -78,6 +121,10 @@ class ShapeClass(NamedTuple):
     ``mesh`` is ``()`` for a single-device server, else the ordered
     ``(axis name, axis size)`` pairs of the join axes — so the same query
     stream served on different meshes compiles (and caches) per mesh shape.
+    ``serve_mode`` and ``bucket_cap`` are part of the key too: the psum and
+    exact-parity pipelines are different programs with different shapes
+    (the shuffle buffers are ``bucket_cap``-sized), so entries of one mode
+    can never collide with — or evict compilations of — the other.
     """
 
     caps: tuple[int, ...]    # per-side bucketed capacities
@@ -91,6 +138,8 @@ class ShapeClass(NamedTuple):
     fp_rate: float
     confidence: float
     mesh: tuple = ()
+    serve_mode: str = "exact-parity"
+    bucket_cap: int = 0      # mesh classes only; 0 = single-device
 
 
 @dataclass
@@ -109,6 +158,7 @@ class JoinRequest:
     b_max: Optional[int] = DEFAULT_B_MAX
     dedup: bool = False
     use_kernels: bool = False
+    serve_mode: Optional[str] = None   # None -> the server's default
     # filled by the server
     result: Optional[JoinResult] = None
     done: bool = False
@@ -138,21 +188,32 @@ class ServerDiagnostics:
     # distributed-mode meters (mesh servers only)
     dist_shuffled_tuple_bytes: float = 0.0   # measured live bytes moved
     per_device_shuffled_bytes: Optional[np.ndarray] = None  # f64 [k]
+    # shuffle rows dropped beyond the bucket plan (psum capacity planning);
+    # always 0 under the lossless exact-parity default
+    dist_dropped_tuples: float = 0.0
+    per_device_dropped_tuples: Optional[np.ndarray] = None  # f64 [k]
+    # static per-device collective-buffer bytes (the Eq. 24 serve-time wire
+    # model: all_to_all buffers + merge collectives; what a dense dataflow
+    # actually puts on the wire, unlike the live-tuple meter above)
+    dist_wire_bytes_model: float = 0.0
     max_batch: int = 0
 
     def snapshot(self) -> dict:
         d = dict(vars(self))
-        if d["per_device_shuffled_bytes"] is not None:
-            d["per_device_shuffled_bytes"] = [
-                float(x) for x in d["per_device_shuffled_bytes"]]
+        for key in ("per_device_shuffled_bytes", "per_device_dropped_tuples"):
+            if d[key] is not None:
+                d[key] = [float(x) for x in d[key]]
         return d
 
 
-def shape_class_of(req: JoinRequest, mesh_shape: tuple = ()) -> ShapeClass:
+def shape_class_of(req: JoinRequest, mesh_shape: tuple = (),
+                   serve_mode: str = "exact-parity",
+                   bucket_cap: int = 0) -> ShapeClass:
     caps = tuple(bucket_capacity(r.capacity) for r in req.rels)
     return ShapeClass(caps, len(caps), req.max_strata, req.b_max,
                       req.expr, req.agg, req.dedup, req.use_kernels,
-                      req.fp_rate, req.budget.confidence, mesh_shape)
+                      req.fp_rate, req.budget.confidence, mesh_shape,
+                      serve_mode, bucket_cap)
 
 
 def _make_prepare(max_strata: int):
@@ -196,6 +257,16 @@ class JoinServer:
     distributed path; the default (local rows) can never drop a row, which
     the bit-parity guarantee needs — tighter caps trade memory for counted
     overflow (surfaced in the result diagnostics).
+
+    ``serve_mode`` picks the cluster-scale merge strategy (overridable per
+    request):
+
+    * ``'exact-parity'`` (default): gather merge, lossless buckets —
+      bit-identical to the single-device pipeline at any mesh size.
+    * ``'psum'``: single-psum merge of estimator parts + buckets
+      capacity-planned from the dataset's Bloom-intersection overlap
+      estimate — the paper's cheap-collective dataflow; accuracy is
+      statistical (the accuracy gate), dropped rows are counted.
     """
 
     def __init__(self, *, batch_slots: int = 4,
@@ -203,7 +274,10 @@ class JoinServer:
                  sigma_registry: Optional[SigmaRegistry] = None,
                  mesh=None, join_axes: Optional[Sequence[str]] = None,
                  bucket_cap: Optional[int] = None,
+                 serve_mode: str = "exact-parity",
                  filter_cache_entries: int = 256):
+        assert serve_mode in SERVE_MODES, serve_mode
+        self.serve_mode = serve_mode
         self.batch_slots = batch_slots
         self.cost_model = cost_model
         self.sigma = SigmaRegistry() if sigma_registry is None \
@@ -211,6 +285,7 @@ class JoinServer:
         self.queue: list[JoinRequest] = []
         self.datasets: dict[str, list[Relation]] = {}
         self._dataset_fps: dict[str, list[str]] = {}
+        self._dataset_overlap: dict[str, float] = {}
         self._exec_cache: dict = {}
         # LRU of (fingerprint, num_blocks, seed) -> words: bounded so a
         # long-running server with ever-fresh seeds cannot accumulate
@@ -231,6 +306,8 @@ class JoinServer:
             self.mesh_shape = tuple((a, mesh.shape[a]) for a in axes)
             self.diagnostics.per_device_shuffled_bytes = np.zeros(
                 self.mesh_k, np.float64)
+            self.diagnostics.per_device_dropped_tuples = np.zeros(
+                self.mesh_k, np.float64)
         else:
             self.join_axes = ()
             self.mesh_k = 1
@@ -250,8 +327,12 @@ class JoinServer:
         Fingerprints are taken here, once — N steps over the dataset build
         its Bloom filter words exactly once per ``(num_blocks, seed)``, and
         re-registering identical relations under a new name reuses the same
-        cached words.
+        cached words.  On a mesh the Bloom-intersection overlap estimate is
+        also taken here (on the host copy, before device placement) — it
+        sizes the capacity-planned shuffle buckets of psum-mode queries.
         """
+        if self.mesh is not None:
+            self._dataset_overlap[name] = bloom_overlap_estimate(rels)
         self.datasets[name] = self._admit_rels(rels)
         self._dataset_fps[name] = [fingerprint(r) for r in self.datasets[name]]
 
@@ -284,11 +365,43 @@ class JoinServer:
             raise ValueError("JoinServer needs a concrete b_max "
                              f"(e.g. the default {DEFAULT_B_MAX}); the "
                              "adaptive b_max=None grid is driver-side only")
+        mode = req.serve_mode or self.serve_mode
+        if mode not in SERVE_MODES:
+            raise ValueError(f"unknown serve_mode {mode!r}")
+        if self.mesh is None or req.use_kernels:
+            # psum vs exact-parity only distinguishes mesh merge strategies;
+            # off-mesh (and on the single-device kernel route) there is one
+            # pipeline and it IS the exact one
+            mode = "exact-parity"
         req._class = shape_class_of(
-            req, () if req.use_kernels else self.mesh_shape)
+            req, () if req.use_kernels else self.mesh_shape, mode,
+            self._planned_cap(req, mode))
         req._submit_t = time.perf_counter()
         self.queue.append(req)
         return req
+
+    def _planned_cap(self, req: JoinRequest, mode: str) -> int:
+        """Static per-(source, dest) shuffle bucket capacity for this query.
+
+        exact-parity: the lossless worst case (local rows) unless the server
+        was constructed with an explicit ``bucket_cap``.  psum: planned from
+        the dataset's registration-time Bloom overlap estimate with 2x slack
+        (the dry-run's overlap-hint trick), pow2-bucketed so near-identical
+        estimates share one compiled executable; inline relations (no
+        registration, no estimate) fall back to overlap 1.0 — still the
+        2x/k uniform-hashing plan, just not filter-informed.
+        """
+        if self.mesh is None or req.use_kernels:
+            return 0
+        local_n = max(bucket_capacity(r.capacity) for r in req.rels) \
+            // self.mesh_k
+        if self.bucket_cap:
+            return min(self.bucket_cap, local_n)
+        if mode != "psum":
+            return local_n
+        overlap = self._dataset_overlap.get(req.dataset, 1.0)
+        cap = planned_bucket_cap(local_n, self.mesh_k, overlap)
+        return min(bucket_capacity(cap), local_n)
 
     # -- executable + filter-word caches ------------------------------------
 
@@ -421,9 +534,15 @@ class JoinServer:
 
     def _decide_b_rows(self, cls: ShapeClass, batch, B, population, skeys,
                        strata_slice, d_filter):
-        """Host decisions: exact-affordable?  b_i from budget + sigma."""
+        """Host decisions: exact-affordable?  b_i from budget + sigma.
+
+        The strata layout is whatever the prepare stage emitted — canonical
+        [S] for exact-parity, concatenated per-device [k*S] for psum; both
+        are complete disjoint covers of the strata, and every decision here
+        is per-stratum, so the same code sizes both.
+        """
         sampled_idx, b_rows = [], []
-        zeros_b = jnp.zeros((cls.max_strata,), jnp.float32)
+        zeros_b = jnp.zeros((population.shape[1],), jnp.float32)
         for i, req in enumerate(batch):
             budget, total_pop = req.budget, float(population[i].sum())
             exact_ok = budget.is_exact or (
@@ -447,13 +566,15 @@ class JoinServer:
 
     def _finish_batch(self, batch, *, strata_slice, live_counts, total_counts,
                       fbytes, d_filter, exact_idx, e_est, e_cnt,
-                      value, err, cnt, dof, stats, skeys):
+                      value, err, cnt, dof, stats, skeys, dropped=None):
         """Per-query results + sigma feedback (shared by both backends)."""
         n = batch[0]._class.n_inputs
         for i, req in enumerate(batch):
             strata_i = strata_slice(i)
             live_i, tot_i = live_counts[i], total_counts[i]
             diag = dict(
+                dist_dropped_tuples=0.0 if dropped is None
+                else float(dropped[i]),
                 total_counts=tot_i, live_counts=live_i,
                 overlap_fraction=jnp.sum(live_i)
                 / jnp.maximum(jnp.sum(tot_i), 1),
@@ -501,7 +622,25 @@ class JoinServer:
                 sample_args=lambda prep, b, s: (prep.sorted_rels, prep.strata,
                                                 b, s),
                 exact_args=lambda prep: (prep.sorted_rels, prep.strata))
-        cap = self.bucket_cap or max(cls.caps) // self.mesh_k
+        cap = cls.bucket_cap or max(cls.caps) // self.mesh_k
+        if cls.serve_mode == "psum":
+            return dict(
+                prepare=partial(make_serve_prepare, self.mesh,
+                                self.join_axes, n_rels=cls.n_inputs,
+                                num_blocks=num_blocks,
+                                max_strata=cls.max_strata, bucket_cap=cap,
+                                merge="psum"),
+                sample=partial(make_serve_sample_psum, self.mesh,
+                               self.join_axes, n_rels=cls.n_inputs,
+                               b_max=cls.b_max, agg=cls.agg, dedup=cls.dedup,
+                               confidence=cls.confidence, expr=cls.expr),
+                exact=partial(make_serve_exact_psum, self.mesh,
+                              self.join_axes, n_rels=cls.n_inputs,
+                              agg=cls.agg, expr=cls.expr),
+                sample_args=lambda prep, b, s: (prep.sorted_rels,
+                                                prep.local_strata, b, s),
+                exact_args=lambda prep: (prep.sorted_rels,
+                                         prep.local_strata))
         return dict(
             prepare=partial(make_serve_prepare, self.mesh, self.join_axes,
                             n_rels=cls.n_inputs, num_blocks=num_blocks,
@@ -518,6 +657,25 @@ class JoinServer:
                                             prep.strata.valid, b, s),
             exact_args=lambda prep: (prep.sorted_rels, prep.local_strata,
                                      prep.strata))
+
+    def _wire_bytes_model(self, cls: ShapeClass) -> float:
+        """Static per-device collective bytes for ONE query through the mesh
+        pipeline (buffers, not live tuples — what a static-shape dataflow
+        puts on the wire; the serve-time restatement of Eq. 24)."""
+        k = self.mesh_k
+        if k <= 1:
+            return 0.0
+        cap = cls.bucket_cap or max(cls.caps) // k
+        n = cls.n_inputs
+        a2a = n * (k - 1) * cap * TUPLE_BYTES     # key shuffle send buffers
+        if cls.serve_mode == "psum":
+            merge = len(SumParts._fields) * 4 * (k - 1)
+        else:
+            # gather merge: all_gathers of [S] slot arrays — strata keys +
+            # per-side counts (prepare), 7 stat fields (sample), per-side
+            # sums (exact)
+            merge = ((1 + n) + 7 + n) * cls.max_strata * 4 * (k - 1)
+        return float(a2a + merge)
 
     def _run_batch(self, cls: ShapeClass, batch: list[JoinRequest]) -> None:
         """One engine step — single fused dispatch per stage; with a mesh,
@@ -561,12 +719,15 @@ class JoinServer:
             exact, _ = self._executable("exact", cls, B, builders["exact"])
             e_est, e_cnt = exact(*builders["exact_args"](prep))
 
+        dropped = None if self.mesh is None else np.asarray(
+            jax.device_get(prep.bucket_overflow), np.float64)
         self._finish_batch(
             batch, strata_slice=slice_i, live_counts=prep.live_counts,
             total_counts=prep.total_counts,
             fbytes=num_blocks * bloom.WORDS_PER_BLOCK * 4, d_filter=d_filter,
             exact_idx=exact_idx, e_est=e_est, e_cnt=e_cnt, value=value,
-            err=err, cnt=cnt, dof=dof, stats=stats, skeys=skeys)
+            err=err, cnt=cnt, dof=dof, stats=stats, skeys=skeys,
+            dropped=dropped)
 
         if self.mesh is not None:
             # measured per-device shuffle volume (the paper's data-movement
@@ -578,3 +739,12 @@ class JoinServer:
             self.diagnostics.per_device_shuffled_bytes += np.asarray(
                 jax.device_get(prep.device_shuffled_bytes))[:n_real].sum(
                     axis=0)
+            # capacity-plan feedback: rows dropped beyond the bucket plan
+            # (always 0 under the lossless exact-parity default)
+            self.diagnostics.dist_dropped_tuples += float(
+                dropped[:n_real].sum())
+            self.diagnostics.per_device_dropped_tuples += np.asarray(
+                jax.device_get(prep.device_dropped),
+                np.float64)[:n_real].sum(axis=0)
+            self.diagnostics.dist_wire_bytes_model += \
+                n_real * self._wire_bytes_model(cls)

@@ -1,0 +1,158 @@
+"""Statistical accuracy harness for ApproxJoin backends.
+
+The bit-parity suite (tests/test_join_serve_distributed.py) proves the
+expensive gather-merge serve path reproduces the single-device pipeline
+float-for-float.  An *approximate* system's real contract is statistical —
+"tight error bounds on the accuracy of the final results" — and that is the
+only gate the cheap psum merge with capacity-planned buckets can pass.  This
+harness states that contract once, for ANY backend:
+
+Given R seeded replications over synthetic relations with known ground truth
+(the exact ``repartition_join`` baseline from ``core/baselines.py``):
+
+(a) **relative error within the CLT bound**: the mean relative error of the
+    SUM estimate is dominated by the mean relative CLT half-width the
+    backend reported (plus the per-replication check feeding (b));
+(b) **CI coverage**: the reported ``[estimate ± error_bound]`` interval
+    covers the truth in at least ``confidence - coverage_slack`` of the
+    replications;
+(c) **allocation-faithful draws**: realized per-stratum draw counts equal
+    the stratified allocation ``min(max(ceil(s * B_i), 1), b_max)`` over
+    joinable strata (skipped for backends that do not expose stats);
+plus COUNT (exact given the strata) within ``count_rtol`` — the tolerance a
+capacity-planned backend's counted drops must stay inside.
+
+A backend is any ``fn(rels, seed) -> (estimate, error_bound, count, stats)``
+with floats and an optional :class:`~repro.core.estimators.StratumStats`-like
+pytree (any slot layout — canonical [S] or concatenated per-device [k*S];
+the checks are per-stratum sums, layout-free).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.baselines import repartition_join
+from repro.data.synthetic import overlapping_relations
+
+
+@dataclass(frozen=True)
+class GateConfig:
+    """Workload + thresholds of one accuracy-gate run.
+
+    The defaults build joins with ~64 shared strata of ~8 rows per side
+    (population B_i ~ 64), so the pilot allocation draws enough per stratum
+    for the variance estimate to be real — a gate over strata with b_i = 1
+    would be vacuous (zero estimated variance, exact-by-accident sampling).
+    """
+
+    replications: int = 30
+    n_rows: int = 2048
+    keys_per_dataset: int = 256
+    overlap: float = 0.25
+    pilot_fraction: float = 0.1
+    b_max: int = 256
+    max_strata: int = 512
+    confidence: float = 0.95
+    coverage_slack: float = 0.05
+    count_rtol: float = 1e-6
+    seed: int = 0
+
+
+@dataclass
+class GateReport:
+    """Everything the gate measured; ``failures`` empty == gate passed."""
+
+    replications: int = 0
+    coverage: float = 0.0
+    nominal: float = 0.0
+    mean_rel_err: float = 0.0
+    mean_rel_bound: float = 0.0
+    max_count_rel_err: float = 0.0
+    alloc_mismatches: int = 0
+    checked_allocation: bool = False
+    failures: list = field(default_factory=list)
+
+    @property
+    def passed(self) -> bool:
+        return not self.failures
+
+    def summary(self) -> str:
+        return (f"coverage {self.coverage:.3f} (nominal {self.nominal:.2f}), "
+                f"rel err {self.mean_rel_err:.4f} vs CLT bound "
+                f"{self.mean_rel_bound:.4f}, count rel err "
+                f"{self.max_count_rel_err:.2e}, alloc mismatches "
+                f"{self.alloc_mismatches} over {self.replications} reps"
+                + ("" if self.passed else f" — FAILURES: {self.failures}"))
+
+
+def expected_allocation(population: np.ndarray, pilot_fraction: float,
+                        b_max: int) -> np.ndarray:
+    """The §3.2-II pilot allocation the sampler must realize per stratum."""
+    want = np.where(population > 0,
+                    np.maximum(np.ceil(pilot_fraction * population), 1.0),
+                    0.0)
+    return np.minimum(want, float(b_max))
+
+
+_TRUTH_CACHE: dict = {}
+
+
+def _workload(cfg: GateConfig, r: int):
+    """Replication r's relations + exact ground truth (truth memoized —
+    several backends gate over the same seeded workloads)."""
+    rels = overlapping_relations(
+        [cfg.n_rows] * 2, cfg.overlap,
+        keys_per_dataset=cfg.keys_per_dataset, seed=cfg.seed + r)
+    key = (cfg.n_rows, cfg.keys_per_dataset, cfg.overlap, cfg.seed + r)
+    if key not in _TRUTH_CACHE:
+        truth = repartition_join(rels, expr="sum")
+        _TRUTH_CACHE[key] = (float(truth.estimate), float(truth.count))
+    return rels, _TRUTH_CACHE[key]
+
+
+def run_accuracy_gate(backend, cfg: GateConfig = GateConfig()) -> GateReport:
+    """Run R replications of ``backend`` against exact ground truth."""
+    hits, rel_errs, rel_bounds, count_errs = 0, [], [], []
+    alloc_bad, checked_alloc = 0, False
+    for r in range(cfg.replications):
+        rels, (t_sum, t_cnt) = _workload(cfg, r)
+        est, bound, cnt, stats = backend(rels, cfg.seed + 7919 + r)
+        hits += abs(est - t_sum) <= bound
+        rel_errs.append(abs(est - t_sum) / max(abs(t_sum), 1e-9))
+        rel_bounds.append(bound / max(abs(t_sum), 1e-9))
+        count_errs.append(abs(cnt - t_cnt) / max(t_cnt, 1.0))
+        if stats is not None:
+            checked_alloc = True
+            pop = np.asarray(stats.population, np.float64)
+            drawn = np.where(np.asarray(stats.valid),
+                             np.asarray(stats.n_sampled, np.float64), 0.0)
+            want = expected_allocation(pop, cfg.pilot_fraction, cfg.b_max)
+            alloc_bad += int(np.sum(want != drawn))
+
+    rep = GateReport(
+        replications=cfg.replications,
+        coverage=hits / cfg.replications,
+        nominal=cfg.confidence,
+        mean_rel_err=float(np.mean(rel_errs)),
+        mean_rel_bound=float(np.mean(rel_bounds)),
+        max_count_rel_err=float(np.max(count_errs)),
+        alloc_mismatches=alloc_bad,
+        checked_allocation=checked_alloc)
+    if rep.coverage < cfg.confidence - cfg.coverage_slack:
+        rep.failures.append(
+            f"coverage {rep.coverage:.3f} < "
+            f"{cfg.confidence - cfg.coverage_slack:.3f}")
+    if rep.mean_rel_err > rep.mean_rel_bound:
+        rep.failures.append(
+            f"mean relative error {rep.mean_rel_err:.4f} exceeds the mean "
+            f"CLT relative bound {rep.mean_rel_bound:.4f}")
+    if rep.max_count_rel_err > cfg.count_rtol:
+        rep.failures.append(
+            f"count rel err {rep.max_count_rel_err:.2e} > {cfg.count_rtol}")
+    if alloc_bad:
+        rep.failures.append(
+            f"{alloc_bad} strata drew != the stratified allocation")
+    return rep

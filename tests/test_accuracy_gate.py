@@ -1,0 +1,144 @@
+"""The statistical accuracy gate (tests/accuracy.py) applied to every join
+backend: the approx_join driver, the gather-merge (exact-parity) server and
+the psum server with capacity-planned shuffle buckets, at mesh 1/2/4/8.
+
+This is what licenses the cheap psum serve path: it can never be
+bit-identical to the single-device pipeline (float reassociation in the
+psum, counted drops beyond the bucket plan), so its contract is the paper's
+— CLT-bounded relative error, nominal CI coverage, allocation-faithful
+stratified draws — verified over >= 30 seeded replications against the
+exact ``repartition_join`` ground truth.
+
+Mesh sizes > 1 run in a SUBPROCESS with
+``--xla_force_host_platform_device_count=8`` so the rest of the suite keeps
+the real single-device backend; mesh 1 and the driver run in-process.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from accuracy import GateConfig, run_accuracy_gate
+from repro.core.budget import QueryBudget
+from repro.core.join import approx_join
+from repro.runtime.join_serve import JoinRequest, JoinServer
+
+CFG = GateConfig()
+# capacity-planned buckets may drop (counted) tuples; the count estimate is
+# allowed to move by at most 2% — anything silent or larger fails the gate
+PSUM_CFG = GateConfig(count_rtol=2e-2)
+
+
+def approx_join_backend(rels, seed):
+    res = approx_join(
+        rels, QueryBudget(error=0.5, pilot_fraction=CFG.pilot_fraction),
+        max_strata=CFG.max_strata, b_max=CFG.b_max, seed=seed)
+    return (float(res.estimate), float(res.error_bound), float(res.count),
+            res.stats)
+
+
+def make_server_backend(server: JoinServer):
+    """One registered dataset + one pilot-round query per replication."""
+    def backend(rels, seed):
+        name = f"rep{seed}"
+        server.register_dataset(name, rels)
+        q = server.submit(JoinRequest(
+            dataset=name,
+            budget=QueryBudget(error=0.5, pilot_fraction=CFG.pilot_fraction),
+            query_id=name, seed=seed, max_strata=CFG.max_strata,
+            b_max=CFG.b_max))
+        server.run()
+        return (float(q.result.estimate), float(q.result.error_bound),
+                float(q.result.count), q.result.stats)
+    return backend
+
+
+def mesh_server(devices: int, serve_mode: str) -> JoinServer:
+    import jax
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(jax.devices()[:devices]), ("data",))
+    return JoinServer(batch_slots=1, mesh=mesh, serve_mode=serve_mode)
+
+
+def test_accuracy_gate_approx_join():
+    rep = run_accuracy_gate(approx_join_backend, CFG)
+    assert rep.passed, rep.summary()
+    assert rep.checked_allocation
+
+
+@pytest.mark.parametrize("serve_mode", ["exact-parity", "psum"])
+def test_accuracy_gate_server_mesh1(serve_mode):
+    srv = mesh_server(1, serve_mode)
+    rep = run_accuracy_gate(make_server_backend(srv), PSUM_CFG
+                            if serve_mode == "psum" else CFG)
+    assert rep.passed, rep.summary()
+    assert rep.checked_allocation
+    assert srv.diagnostics.dist_dropped_tuples == 0.0
+
+
+def test_gate_rejects_biased_backend():
+    """Harness self-test: a backend whose estimate is 20% off must fail."""
+    def biased(rels, seed):
+        est, bound, cnt, _ = approx_join_backend(rels, seed)
+        return est * 1.2, bound, cnt, None
+    rep = run_accuracy_gate(biased, GateConfig(replications=10))
+    assert not rep.passed, rep.summary()
+
+
+def test_gate_rejects_overconfident_backend():
+    """A backend reporting absurdly tight error bounds must fail coverage."""
+    def overconfident(rels, seed):
+        est, bound, cnt, _ = approx_join_backend(rels, seed)
+        return est, bound * 1e-4, cnt, None
+    rep = run_accuracy_gate(overconfident, GateConfig(replications=10))
+    assert not rep.passed, rep.summary()
+
+
+def test_gate_rejects_silent_drops():
+    """Uncounted lost tuples surface as a count mismatch."""
+    def lossy(rels, seed):
+        est, bound, cnt, _ = approx_join_backend(rels, seed)
+        return est, bound, cnt * 0.9, None
+    rep = run_accuracy_gate(lossy, GateConfig(replications=5))
+    assert not rep.passed, rep.summary()
+
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+from test_accuracy_gate import (CFG, PSUM_CFG, make_server_backend,
+                                mesh_server, run_accuracy_gate)
+
+for d in (2, 4, 8):
+    for mode, cfg in (("exact-parity", CFG), ("psum", PSUM_CFG)):
+        srv = mesh_server(d, mode)
+        rep = run_accuracy_gate(make_server_backend(srv), cfg)
+        dropped = srv.diagnostics.dist_dropped_tuples
+        print(f"mesh{d} {mode}: {rep.summary()} dropped={dropped}",
+              flush=True)
+        assert rep.passed, (d, mode, rep.summary())
+        assert rep.checked_allocation
+        if mode == "exact-parity":
+            # lossless buckets: the parity path may never drop a row
+            assert dropped == 0.0, dropped
+        else:
+            # whatever the plan dropped was counted, per device too
+            assert dropped == float(
+                srv.diagnostics.per_device_dropped_tuples.sum())
+print("ACCURACY-GATE-OK")
+"""
+
+
+@pytest.mark.slow
+def test_accuracy_gate_mesh_2_4_8():
+    env = dict(os.environ,
+               PYTHONPATH=os.pathsep.join(["src", "tests"]))
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "ACCURACY-GATE-OK" in out.stdout, out.stdout[-2000:]

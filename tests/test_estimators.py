@@ -4,10 +4,13 @@ unbiasedness, distributed-merge equivalence."""
 import jax.numpy as jnp
 import numpy as np
 from conftest import hypothesis_or_stubs
-from repro.core.estimators import (StratumStats, clt_count, clt_finish,
-                                   clt_sum, clt_sum_parts,
-                                   horvitz_thompson_sum,
-                                   inclusion_probability, t_quantile)
+from repro.core.estimators import (HTParts, StratumStats, clt_avg,
+                                   clt_avg_from, clt_count, clt_finish,
+                                   clt_stdev, clt_stdev_from, clt_sum,
+                                   clt_sum_parts, horvitz_thompson_sum,
+                                   ht_finish, ht_sum_parts,
+                                   inclusion_probability,
+                                   second_moment_stats, t_quantile)
 
 given, settings, st = hypothesis_or_stubs()
 
@@ -129,3 +132,123 @@ def test_clt_variance_nonnegative(pops, frac):
     est = clt_sum(stats)
     assert float(est.variance) >= 0.0
     assert float(est.error_bound) >= 0.0
+
+
+def _moment_stats(B, b, mu, sd):
+    """Stats with EXACT per-stratum sample moments (mean mu, variance sd^2);
+    isolates the estimator's analytic shape from sampling noise."""
+    B = np.asarray(B, np.float32)
+    b = np.asarray(b, np.float32)
+    mu = np.asarray(mu, np.float32)
+    sd = np.asarray(sd, np.float32)
+    return StratumStats(jnp.asarray(B > 0), jnp.asarray(B), jnp.asarray(b),
+                        jnp.asarray(b * mu),
+                        jnp.asarray(b * (sd**2 + mu**2)))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(50, 100_000), st.floats(-50, 50), st.floats(0.1, 20),
+       st.integers(2, 30), st.integers(1, 40))
+def test_ci_width_shrinks_monotonically_with_sample_size(B, mu, sd, b1, step):
+    """More draws at the same sample moments never widen the interval:
+    the FPC factor (B-b)/(b-1) and the t quantile both fall with b."""
+    b2 = min(b1 + step, B)
+    b1 = min(b1, B)
+    w1 = float(clt_sum(_moment_stats([B], [b1], [mu], [sd])).error_bound)
+    w2 = float(clt_sum(_moment_stats([B], [b2], [mu], [sd])).error_bound)
+    assert np.isfinite(w1) and np.isfinite(w2)
+    assert w2 <= w1 * (1 + 1e-6), (b1, b2, w1, w2)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 12), st.integers(0, 2**31 - 1))
+def test_estimates_invariant_to_stratum_permutation(n_strata, perm_seed):
+    """Slot order is an implementation detail (canonical key-sorted [S] vs
+    the psum path's concatenated per-device layout): every estimator must
+    give the same answer, up to float reassociation of the sums."""
+    rng = np.random.default_rng(0)
+    pops = list(rng.integers(10, 500, size=n_strata))
+    stats, _ = _stats_from_population(rng, pops, 0.2)
+    uf = jnp.asarray(rng.normal(5.0, 1.0, n_strata).astype(np.float32))
+    uc = jnp.asarray(np.maximum(rng.integers(1, 10, n_strata), 1)
+                     .astype(np.float32))
+    perm = np.random.default_rng(perm_seed).permutation(n_strata)
+    p_stats = StratumStats(*[jnp.asarray(np.asarray(x)[perm])
+                             for x in stats])
+    for fn, args, pargs in (
+            (clt_sum, (stats,), (p_stats,)),
+            (clt_avg, (stats,), (p_stats,)),
+            (clt_stdev, (stats,), (p_stats,)),
+            (horvitz_thompson_sum, (stats, uf, uc),
+             (p_stats, uf[perm], uc[perm]))):
+        a, b = fn(*args), fn(*pargs)
+        np.testing.assert_allclose(float(a.estimate), float(b.estimate),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(float(a.error_bound),
+                                   float(b.error_bound), rtol=1e-4,
+                                   atol=1e-5)
+        assert float(a.dof) == float(b.dof)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 10), st.integers(0, 2**31 - 1))
+def test_zero_sample_strata_give_finite_bounds(n_strata, seed):
+    """Strata that drew nothing (and empty strata) must yield finite — not
+    NaN/inf — estimates and bounds from every estimator."""
+    rng = np.random.default_rng(seed)
+    B = rng.integers(0, 200, n_strata).astype(np.float32)
+    b = np.where(rng.random(n_strata) < 0.5, 0.0,
+                 rng.integers(0, 5, n_strata)).astype(np.float32)
+    b = np.minimum(b, B)
+    mu = rng.normal(3.0, 2.0, n_strata).astype(np.float32)
+    sd = np.abs(rng.normal(0.0, 2.0, n_strata)).astype(np.float32)
+    stats = _moment_stats(B, b, mu, sd)
+    uf = jnp.asarray(np.where(b > 0, mu, 0.0).astype(np.float32))
+    uc = jnp.asarray(np.minimum(b, 3.0).astype(np.float32))
+    for est in (clt_sum(stats), clt_avg(stats), clt_stdev(stats),
+                horvitz_thompson_sum(stats, uf, uc)):
+        for v in (est.estimate, est.error_bound, est.variance, est.dof):
+            assert np.isfinite(float(v)), (est, B, b)
+
+
+def test_ht_parts_merge_equals_direct():
+    """psum-style merge of per-shard HT parts == single-shot HT estimate
+    (the psum serve path's dedup estimator)."""
+    rng = np.random.default_rng(5)
+    s1, _ = _stats_from_population(rng, [100, 400], 0.3)
+    s2, _ = _stats_from_population(rng, [250, 60], 0.3)
+    ufs = [jnp.asarray(rng.normal(4, 1, 2).astype(np.float32))
+           for _ in range(2)]
+    ucs = [jnp.asarray(rng.integers(1, 8, 2).astype(np.float32))
+           for _ in range(2)]
+    p1 = ht_sum_parts(s1, ufs[0], ucs[0])
+    p2 = ht_sum_parts(s2, ufs[1], ucs[1])
+    merged = ht_finish(HTParts(*[a + b for a, b in zip(p1, p2)]))
+    whole = horvitz_thompson_sum(
+        StratumStats(*[jnp.concatenate([a, b]) for a, b in zip(s1, s2)]),
+        jnp.concatenate(ufs), jnp.concatenate(ucs))
+    np.testing.assert_allclose(float(merged.estimate), float(whole.estimate),
+                               rtol=1e-6)
+    np.testing.assert_allclose(float(merged.error_bound),
+                               float(whole.error_bound), rtol=1e-5)
+
+
+def test_avg_stdev_parts_merge_equals_direct():
+    """AVG and STDEV finish from psum'd parts == whole-array estimates."""
+    rng = np.random.default_rng(9)
+    s1, _ = _stats_from_population(rng, [150, 700], 0.2)
+    s2, _ = _stats_from_population(rng, [80, 900], 0.2)
+    whole = StratumStats(*[jnp.concatenate([a, b])
+                           for a, b in zip(s1, s2)])
+    parts = clt_sum_parts(s1)
+    parts = type(parts)(*[a + b for a, b in zip(parts, clt_sum_parts(s2))])
+    a_merged, a_whole = clt_avg_from(parts), clt_avg(whole)
+    np.testing.assert_allclose(float(a_merged.estimate),
+                               float(a_whole.estimate), rtol=1e-6)
+    tau2 = (clt_sum_parts(second_moment_stats(s1)).tau
+            + clt_sum_parts(second_moment_stats(s2)).tau)
+    s_merged, s_whole = clt_stdev_from(parts, tau2), clt_stdev(whole)
+    np.testing.assert_allclose(float(s_merged.estimate),
+                               float(s_whole.estimate), rtol=1e-5)
+    np.testing.assert_allclose(float(s_merged.error_bound),
+                               float(s_whole.error_bound), rtol=1e-4)

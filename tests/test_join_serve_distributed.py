@@ -136,6 +136,109 @@ def test_distributed_server_parity_1_2_4_8():
         assert marker in out.stdout, (marker, out.stdout[-2000:])
 
 
+def _mesh1_server(**kw):
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+    from repro.runtime.join_serve import JoinServer
+    return JoinServer(mesh=Mesh(np.array(jax.devices()[:1]), ("data",)),
+                      **kw)
+
+
+def test_serve_mode_cache_isolation(rng):
+    """psum and exact-parity entries never collide in the executable cache:
+    switching modes compiles fresh programs once, then each mode hits its
+    own entries — no recompiles of the other mode's executables.  At mesh
+    size 1 both modes run the same arithmetic, so results must agree."""
+    from conftest import make_pair
+    from repro.core.budget import QueryBudget
+    from repro.runtime.join_serve import JoinRequest
+
+    r1, r2 = make_pair(rng, n=1 << 11)
+    srv = _mesh1_server(batch_slots=2)
+    srv.register_dataset("ds", [r1, r2])
+
+    def submit(mode, seed):
+        return srv.submit(JoinRequest(
+            dataset="ds", budget=QueryBudget(error=0.5), query_id=f"{mode}",
+            seed=seed, max_strata=512, b_max=128, serve_mode=mode))
+
+    q_par = submit("exact-parity", 7)
+    srv.run()
+    c_parity = srv.diagnostics.compiles
+    q_psum = submit("psum", 7)
+    srv.run()
+    c_both = srv.diagnostics.compiles
+    assert c_both > c_parity                  # psum compiled its own stages
+    assert q_par._class != q_psum._class
+    assert q_par._class._replace(
+        serve_mode="psum", bucket_cap=q_psum._class.bucket_cap) \
+        == q_psum._class                      # the ONLY key difference
+    # alternate modes (same batch bucket): zero further compiles either way
+    for seed in (8, 9):
+        submit("exact-parity", seed)
+        srv.run()
+        submit("psum", seed)
+        srv.run()
+    assert srv.diagnostics.compiles == c_both
+    assert srv.diagnostics.cache_hits > 0
+    # one device: the psum merge degenerates to the canonical arithmetic
+    assert float(q_psum.result.estimate) == float(q_par.result.estimate)
+    assert float(q_psum.result.error_bound) == float(q_par.result.error_bound)
+
+
+def test_meshless_server_normalizes_serve_mode(rng):
+    """Off-mesh there is one pipeline (the exact one): psum requests fold
+    into the exact-parity shape class instead of forking the cache."""
+    from conftest import make_pair
+    from repro.core.budget import QueryBudget
+    from repro.runtime.join_serve import JoinRequest, JoinServer
+
+    r1, r2 = make_pair(rng, n=1 << 10)
+    srv = JoinServer(batch_slots=2)
+    q = srv.submit(JoinRequest(rels=[r1, r2], budget=QueryBudget(error=0.5),
+                               query_id="t", seed=1, max_strata=256,
+                               b_max=128, serve_mode="psum"))
+    assert q._class.serve_mode == "exact-parity"
+    assert q._class.bucket_cap == 0
+    with pytest.raises(ValueError):
+        srv.submit(JoinRequest(rels=[r1, r2], budget=QueryBudget(),
+                               query_id="t", max_strata=256, b_max=128,
+                               serve_mode="gossip"))
+
+
+def test_forced_bucket_overflow_is_counted(rng):
+    """An under-provisioned bucket plan must COUNT what it drops — in the
+    server totals, per device, and on the per-query result diagnostics —
+    and the count estimate shrinks accordingly (never silently)."""
+    from conftest import make_pair
+    from repro.core.budget import QueryBudget
+    from repro.runtime.join_serve import JoinRequest
+
+    r1, r2 = make_pair(rng, n=1 << 11)
+    srv = _mesh1_server(batch_slots=1, serve_mode="psum", bucket_cap=64)
+    srv.register_dataset("ds", [r1, r2])
+    lossless = _mesh1_server(batch_slots=1, serve_mode="psum")
+    lossless.register_dataset("ds", [r1, r2])
+
+    def ask(server):
+        q = server.submit(JoinRequest(dataset="ds", budget=QueryBudget(),
+                                      query_id="t", seed=3, max_strata=2048,
+                                      b_max=128))
+        server.run()
+        return q
+
+    q_tight, q_free = ask(srv), ask(lossless)
+    d = srv.diagnostics
+    assert d.dist_dropped_tuples > 0
+    assert d.per_device_dropped_tuples.sum() == d.dist_dropped_tuples
+    assert float(q_tight.result.diagnostics.dist_dropped_tuples) \
+        == d.dist_dropped_tuples
+    assert lossless.diagnostics.dist_dropped_tuples == 0
+    assert float(q_free.result.diagnostics.dist_dropped_tuples) == 0.0
+    assert float(q_tight.result.count) < float(q_free.result.count)
+
+
 def test_shape_class_keys_on_mesh_shape(rng):
     """Same query admitted on different mesh shapes lands in different
     executable-cache classes (no cross-mesh executable collisions)."""
