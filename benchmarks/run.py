@@ -27,6 +27,7 @@ MODULES = [
     ("fig15", "fig15_bloom_variants"),
     ("kernels", "kernels_bench"),
     ("serve", "serve_bench"),
+    ("stream", "stream_bench"),
 ]
 
 

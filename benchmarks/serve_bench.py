@@ -54,8 +54,10 @@ def _workload(seed: int):
 
 
 def _request(tenant: str, rels, q: int) -> JoinRequest:
+    # query ids cycle over the batch width: sigma pipelining defers same-id
+    # repeats to later steps, so id diversity is what keeps batches full
     return JoinRequest(rels=rels, budget=QueryBudget(error=0.5),
-                       query_id=f"{tenant}/sum", seed=100 + q,
+                       query_id=f"{tenant}/sum{q % SLOTS}", seed=100 + q,
                        max_strata=MAX_STRATA, b_max=B_MAX)
 
 
@@ -95,13 +97,17 @@ def run() -> list[dict]:
     assert d.max_batch == SLOTS, d.max_batch
 
     served = d.queries - warm["queries"]
+    snap = d.snapshot()
     return [
         row("serve", mode="cold", queries=cold_n, seconds=round(cold_s, 3),
             qps=round(cold_n / cold_s, 2)),
         row("serve", mode="server", queries=served,
             seconds=round(serve_s, 3), qps=round(served / serve_s, 2),
             compiles=d.compiles, recompiles_after_warmup=recompiles,
-            cache_hits=d.cache_hits, max_batch=d.max_batch),
+            cache_hits=d.cache_hits, max_batch=d.max_batch,
+            queue_latency_p50_s=round(snap["queue_latency_p50_s"], 4),
+            queue_latency_p95_s=round(snap["queue_latency_p95_s"], 4),
+            queue_latency_max_s=round(snap["queue_latency_max_s"], 4)),
         row("serve", mode="speedup",
             x=round((served / serve_s) / (cold_n / cold_s), 2)),
     ]
@@ -121,22 +127,24 @@ def _run_distributed_leg(devices: int,
 
     def submit(tenant, q):
         # one seed for the whole run: the per-dataset filter words must be
-        # built once per relation and reused every subsequent step
+        # built once per relation and reused every subsequent step; ids
+        # cycle so sigma pipelining keeps the batches full
         server.submit(JoinRequest(dataset=tenant,
                                   budget=QueryBudget(error=0.5),
-                                  query_id=f"{tenant}/sum", seed=100 + q,
-                                  max_strata=MAX_STRATA, b_max=B_MAX))
+                                  query_id=f"{tenant}/sum{q % SLOTS}",
+                                  seed=100, max_strata=MAX_STRATA,
+                                  b_max=B_MAX))
 
     for q in range(SLOTS):               # warmup: compile every executable
         for tenant in ("small", "large"):
-            submit(tenant, 0)
+            submit(tenant, q)
     server.run()
     warm = server.diagnostics.snapshot()
 
     queries = SLOTS * ROUNDS
     for q in range(queries):
         for tenant in ("small", "large"):
-            submit(tenant, 0)
+            submit(tenant, q)
     t0 = time.perf_counter()
     server.run()
     dt = time.perf_counter() - t0

@@ -9,6 +9,7 @@ Public surface:
   budget       — WITHIN/ERROR query budget interface (§2)
   join         — single-device approx_join orchestrator
   distributed  — shard_map SPMD pipeline over the mesh
+  window       — incremental sub-window layer for streaming joins
   baselines    — Spark native/repartition/broadcast + pre/post-join sampling
 """
 
@@ -27,6 +28,10 @@ from repro.core.estimators import (Estimate, StratumStats, accuracy_loss,
                                    horvitz_thompson_sum, t_quantile)
 from repro.core.join import JoinResult, approx_join
 from repro.core.relation import Relation, relation
-from repro.core.sampling import Strata, build_strata, sample_edges
+from repro.core.sampling import (Reservoir, Strata, build_strata,
+                                 reservoir_empty, reservoir_extend,
+                                 reservoir_merge, sample_edges)
+from repro.core.window import (SubWindow, WindowBuffer, WindowSpec,
+                               window_relations)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

@@ -23,10 +23,11 @@ from __future__ import annotations
 
 from typing import Callable, NamedTuple, Sequence
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.estimators import StratumStats
-from repro.core.hashing import GOLDEN, bounded, counter_hash, fmix32, u32
+from repro.core.hashing import GOLDEN, bounded, counter_hash, fmix32, hash2, u32
 from repro.core.relation import Relation
 
 SENTINEL = 0xFFFFFFFF  # invalid-row key fill; real keys must be < 2^32 - 1
@@ -267,3 +268,113 @@ def exact_sum_of_products(sorted_rels, strata) -> jnp.ndarray:
 
 def exact_count(strata: Strata) -> jnp.ndarray:
     return jnp.sum(strata.population)
+
+
+# ---------------------------------------------------------------------------
+# Merge-able per-stratum reservoirs (streaming, StreamApprox-style).
+#
+# A bounded uniform sample per stratum over an UNBOUNDED stream of values:
+# every item gets a priority from the stateless counter hash keyed on its
+# arrival identity (tick, row) — never on which reservoir folded it — and a
+# stratum from its key hash; the reservoir is the bottom-``cap`` priorities
+# per stratum.  Bottom-k by a uniform priority is a uniform without-
+# replacement sample (the classic distributed-reservoir trick), and it makes
+# the sketch *exactly* mergeable: bottom-k of a union only needs the
+# bottom-k of each part, so ``extend(extend(E, A), B)`` equals
+# ``merge(extend(E, A), extend(E, B))`` bit-for-bit (up to u32 priority
+# ties, ~n^2/2^33).  Static [S, cap] shapes, one sort per fold — jittable,
+# vmappable, and shardable like every other stage here.
+# ---------------------------------------------------------------------------
+
+class Reservoir(NamedTuple):
+    """Per-stratum bottom-k value reservoir (priority SENTINEL = empty slot).
+
+    ``n_seen`` counts every valid item ever offered per stratum — the
+    denominator that turns the reservoir into rate/moment estimates.
+    """
+
+    priority: jnp.ndarray  # uint32 [S, cap], ascending per row
+    values: jnp.ndarray    # f32    [S, cap]
+    n_seen: jnp.ndarray    # f32    [S]
+
+
+def reservoir_empty(num_strata: int, cap: int) -> Reservoir:
+    return Reservoir(jnp.full((num_strata, cap), SENTINEL, jnp.uint32),
+                     jnp.zeros((num_strata, cap), jnp.float32),
+                     jnp.zeros((num_strata,), jnp.float32))
+
+
+def _keep_bottom(priority: jnp.ndarray, values: jnp.ndarray, cap: int):
+    order = jnp.argsort(priority, axis=1)
+    return (jnp.take_along_axis(priority, order, axis=1)[:, :cap],
+            jnp.take_along_axis(values, order, axis=1)[:, :cap])
+
+
+def reservoir_extend(res: Reservoir, keys: jnp.ndarray, values: jnp.ndarray,
+                     valid: jnp.ndarray, seed, tick) -> Reservoir:
+    """Fold one micro-batch into the reservoir.
+
+    ``tick`` is the arrival index of the batch (must be unique per fold of
+    the same stream — priorities are ``counter_hash(seed, tick, row, 3)``, so
+    reusing a tick would replay the same priorities).  Stratum assignment is
+    ``hash2(key, seed) % S``.  Invalid rows are ignored everywhere.
+    """
+    S, cap = res.priority.shape
+    n = keys.shape[0]
+    sid = bounded(hash2(keys, seed), jnp.int32(S))               # [n]
+    rows = jnp.arange(n, dtype=jnp.uint32)
+    pri = counter_hash(seed, u32(tick), rows, 3)
+    pri = jnp.where(pri == u32(SENTINEL), u32(SENTINEL - 1), pri)
+    # stage only the incoming batch's bottom-cap per stratum (bottom-k of a
+    # union needs only the bottom-k of each part): lexsort by (stratum,
+    # priority), rank within the stratum run, keep ranks < cap — the final
+    # per-row sort then runs over [S, 2*cap], independent of batch size
+    d = jnp.where(valid, sid, S)
+    order = jnp.lexsort((pri, d))
+    ds = d[order]
+    pos = jnp.arange(n, dtype=jnp.int32)
+    is_start = jnp.concatenate([jnp.ones((1,), bool), ds[1:] != ds[:-1]])
+    slot = pos - jax.lax.cummax(jnp.where(is_start, pos, 0))
+    ok = (ds < S) & (slot < cap)
+    flat = jnp.where(ok, ds * cap + slot, S * cap)
+    grid_p = jnp.full((S * cap + 1,), SENTINEL, jnp.uint32).at[flat].set(
+        pri[order], mode="drop")[:-1].reshape(S, cap)
+    grid_v = jnp.zeros((S * cap + 1,), jnp.float32).at[flat].set(
+        values[order], mode="drop")[:-1].reshape(S, cap)
+    p, v = _keep_bottom(jnp.concatenate([res.priority, grid_p], axis=1),
+                        jnp.concatenate([res.values, grid_v], axis=1), cap)
+    seen = jnp.zeros((S + 1,), jnp.float32).at[d].add(
+        valid.astype(jnp.float32))[:S]
+    return Reservoir(p, v, res.n_seen + seen)
+
+
+def reservoir_merge(a: Reservoir, b: Reservoir) -> Reservoir:
+    """Union of two reservoirs over disjoint (tick-distinct) sub-streams."""
+    assert a.priority.shape == b.priority.shape, (a.priority.shape,
+                                                 b.priority.shape)
+    cap = a.priority.shape[1]
+    p, v = _keep_bottom(jnp.concatenate([a.priority, b.priority], axis=1),
+                        jnp.concatenate([a.values, b.values], axis=1), cap)
+    return Reservoir(p, v, a.n_seen + b.n_seen)
+
+
+def reservoir_fill(res: Reservoir) -> jnp.ndarray:
+    """Occupied slots per stratum ([S] f32) — min(n_seen, cap)."""
+    return jnp.sum((res.priority != u32(SENTINEL)).astype(jnp.float32),
+                   axis=1)
+
+
+def reservoir_moments(res: Reservoir):
+    """(n [S], mean [S], var [S]) of the reservoir sample per stratum.
+
+    Unbiased sample mean/variance of the stream per stratum (the reservoir
+    is a uniform sample); feeds streaming sigma diagnostics.
+    """
+    m = res.priority != u32(SENTINEL)
+    n = jnp.sum(m.astype(jnp.float32), axis=1)
+    nz = jnp.maximum(n, 1.0)
+    vm = jnp.where(m, res.values, 0.0)
+    mean = jnp.sum(vm, axis=1) / nz
+    var = jnp.sum(jnp.where(m, (res.values - mean[:, None]) ** 2, 0.0),
+                  axis=1) / jnp.maximum(n - 1.0, 1.0)
+    return n, mean, var

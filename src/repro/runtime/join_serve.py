@@ -52,14 +52,34 @@ executable cache.
 
 Per-query dynamic decisions (exact-affordable?  per-stratum ``b_i`` from the
 budget + sigma feedback) stay on the host, exactly as in ``approx_join`` —
-the driver role.  Sigma feedback lands *between engine steps*: requests with
-the same ``query_id`` co-batched into one step all see the registry state at
-dispatch time, where a sequential driver would thread each execution's
-feedback into the next.  ``use_kernels`` queries are served through the
-Pallas path per-query (Pallas calls are not batched under vmap here, and the
-kernels are single-device — a mesh server still serves them, on the default
-device); they still share the sigma registry and are tracked in the
-executable cache.
+the driver role.  Sigma feedback lands *between engine steps*, which is why
+the scheduler runs **cross-step sigma pipelining** (``sigma_pipeline``, on
+by default): same-``query_id`` error-budget repeats co-batched into one step
+would all see the registry state at dispatch time, so the scheduler defers
+each repeat to the NEXT step — every execution sees the previous one's
+measured sigma, bit-identical to a sequential driver — and fills the freed
+slot with the next same-class query, so a queue with id diversity loses no
+throughput (asserted in ``tests/test_join_serve.py``).
+
+Scheduling is FIFO until the queue backs up past ``backlog_slots``, then
+**deadline-aware**: latency-budget queries (deadline = submission +
+``latency_s``) are served before error-budget/exact ones (deadline
+infinity), FIFO on ties.  Queue latency is tracked as a bounded sample ring
+and surfaced as p50/p95/max in ``ServerDiagnostics.snapshot()`` — the
+distribution the admission policy consults (and the one ``serve_bench``
+records).
+
+``use_kernels`` queries are served through the Pallas path per-query
+(Pallas calls are not batched under vmap here, and the kernels are
+single-device — a mesh server still serves them, on the default device);
+they still share the sigma registry and are tracked in the executable
+cache.
+
+The streaming subsystem (``runtime/stream_join.py``) layers windowed
+sessions on this engine: ``JoinRequest.filter_seed`` decouples the filter
+hash from the sampling seed, ``_words`` carries a window's pre-merged
+sub-window filter words past the per-dataset cache, and ``overlap_hint``
+re-plans psum shuffle buckets from the session's rolling overlap estimate.
 """
 
 from __future__ import annotations
@@ -142,9 +162,15 @@ class ShapeClass(NamedTuple):
     bucket_cap: int = 0      # mesh classes only; 0 = single-device
 
 
-@dataclass
+@dataclass(eq=False)
 class JoinRequest:
-    """One tenant query: relations (or dataset handle) + budget + query id."""
+    """One tenant query: relations (or dataset handle) + budget + query id.
+
+    ``eq=False``: requests are identities, not values — a generated
+    ``__eq__`` would compare the relation arrays (ambiguous-truth-value
+    errors from jnp) and queue bookkeeping must never conflate two requests
+    that happen to carry equal payloads.
+    """
 
     rels: Optional[Sequence[Relation]] = None
     dataset: Optional[str] = None
@@ -159,13 +185,29 @@ class JoinRequest:
     dedup: bool = False
     use_kernels: bool = False
     serve_mode: Optional[str] = None   # None -> the server's default
+    # filter-hash seed, decoupled from the sampling seed so a streaming
+    # session can vary draws per window while reusing cached filter words
+    # (None -> ``seed``, the classic coupled behaviour)
+    filter_seed: Optional[int] = None
+    # psum bucket planning: live-fraction estimate overriding the dataset's
+    # registration-time one (streaming sessions re-plan from the rolling
+    # measured overlap)
+    overlap_hint: Optional[float] = None
+    # streaming metadata (set by StreamJoinSession)
+    stream: Optional[str] = None
+    window_id: Optional[int] = None
     # filled by the server
     result: Optional[JoinResult] = None
     done: bool = False
+    shed: bool = False                 # dropped by admission control, unserved
     queue_latency_s: float = 0.0
     _class: Optional[ShapeClass] = field(default=None, repr=False)
     _submit_t: float = field(default=0.0, repr=False)
     _fps: Optional[list[str]] = field(default=None, repr=False)
+    # prebuilt per-side filter words (e.g. the OR of cached sub-window
+    # words); when set, the batch path uses them verbatim instead of
+    # fetching through the per-dataset cache
+    _words: Optional[list] = field(default=None, repr=False)
 
 
 @dataclass
@@ -180,6 +222,12 @@ class ServerDiagnostics:
     sampled_queries: int = 0
     kernel_queries: int = 0
     queue_latency_s: float = 0.0    # summed over finished queries
+    # bounded ring of recent per-query queue latencies; snapshot() reduces
+    # it to p50/p95/max (the distribution the deadline-aware admission
+    # consults — a running sum cannot see tail latency)
+    queue_latencies: list = field(default_factory=list, repr=False)
+    sigma_deferrals: int = 0        # same-id repeats pushed to the next step
+    deadline_promotions: int = 0    # backlog steps served out of FIFO order
     filter_s: float = 0.0           # summed batch filter-stage wall time
     filter_build_s: float = 0.0     # summed filter-word build wall time
     filter_builds: int = 0          # Bloom word builds (cache misses)
@@ -203,6 +251,16 @@ class ServerDiagnostics:
         for key in ("per_device_shuffled_bytes", "per_device_dropped_tuples"):
             if d[key] is not None:
                 d[key] = [float(x) for x in d[key]]
+        lat = d.pop("queue_latencies")
+        if lat:
+            p50, p95 = np.percentile(np.asarray(lat, np.float64), [50, 95])
+            d["queue_latency_p50_s"] = float(p50)
+            d["queue_latency_p95_s"] = float(p95)
+            d["queue_latency_max_s"] = float(np.max(lat))
+        else:
+            d["queue_latency_p50_s"] = 0.0
+            d["queue_latency_p95_s"] = 0.0
+            d["queue_latency_max_s"] = 0.0
         return d
 
 
@@ -275,10 +333,24 @@ class JoinServer:
                  mesh=None, join_axes: Optional[Sequence[str]] = None,
                  bucket_cap: Optional[int] = None,
                  serve_mode: str = "exact-parity",
-                 filter_cache_entries: int = 256):
+                 filter_cache_entries: int = 256,
+                 sigma_pipeline: bool = True,
+                 backlog_slots: Optional[int] = None,
+                 latency_samples: int = 4096):
         assert serve_mode in SERVE_MODES, serve_mode
         self.serve_mode = serve_mode
         self.batch_slots = batch_slots
+        # cross-step sigma pipelining: same-query_id error-budget repeats
+        # are deferred to the NEXT step so each sees the previous
+        # execution's measured sigma (sequential-feedback adaptive sizing);
+        # slots freed by a deferral fill with other same-class queries
+        self.sigma_pipeline = sigma_pipeline
+        # queue length beyond which the scheduler goes deadline-aware:
+        # latency-budget queries (deadline = submit + latency_s) are served
+        # before error-budget/exact ones (deadline = infinity), FIFO on ties
+        self.backlog_slots = 2 * batch_slots if backlog_slots is None \
+            else backlog_slots
+        self.latency_samples = latency_samples
         self.cost_model = cost_model
         self.sigma = SigmaRegistry() if sigma_registry is None \
             else sigma_registry
@@ -368,6 +440,12 @@ class JoinServer:
         mode = req.serve_mode or self.serve_mode
         if mode not in SERVE_MODES:
             raise ValueError(f"unknown serve_mode {mode!r}")
+        if req.use_kernels and (req.filter_seed is not None
+                                or req._words is not None):
+            # the Pallas route runs approx_join end to end: it builds its own
+            # filters from req.seed and cannot take prebuilt words
+            raise ValueError("use_kernels is incompatible with filter_seed / "
+                             "prebuilt filter words")
         if self.mesh is None or req.use_kernels:
             # psum vs exact-parity only distinguishes mesh merge strategies;
             # off-mesh (and on the single-device kernel route) there is one
@@ -399,7 +477,9 @@ class JoinServer:
             return min(self.bucket_cap, local_n)
         if mode != "psum":
             return local_n
-        overlap = self._dataset_overlap.get(req.dataset, 1.0)
+        overlap = req.overlap_hint
+        if overlap is None:
+            overlap = self._dataset_overlap.get(req.dataset, 1.0)
         cap = planned_bucket_cap(local_n, self.mesh_k, overlap)
         return min(bucket_capacity(cap), local_n)
 
@@ -457,14 +537,55 @@ class JoinServer:
 
     # -- engine -------------------------------------------------------------
 
+    def _deadline(self, req: JoinRequest) -> float:
+        """Absolute serve-by time: latency budgets are deadlines, error and
+        exact budgets are best-effort (infinite deadline)."""
+        if req.budget.latency_s is None:
+            return float("inf")
+        return req._submit_t + req.budget.latency_s
+
+    def _take_batch(self) -> tuple:
+        """Pick the next step's shape class and batch.
+
+        FIFO until the queue backs up past ``backlog_slots``; then
+        deadline-aware — the class of the tightest-deadline request is
+        served, and within the class candidates are ordered by deadline
+        (stable, so all-error queues stay FIFO).  With ``sigma_pipeline``,
+        at most one error-budget request per ``query_id`` joins a batch:
+        the repeat is deferred one step so it sees this step's measured
+        sigma (sequential-feedback adaptive sizing), and its slot fills
+        with the next same-class query instead.
+        """
+        backlog = len(self.queue) > self.backlog_slots
+        if backlog:
+            head = min(self.queue, key=self._deadline)
+            if head._class != self.queue[0]._class:
+                self.diagnostics.deadline_promotions += 1
+            cls = head._class
+        else:
+            cls = self.queue[0]._class
+        candidates = [r for r in self.queue if r._class == cls]
+        if backlog:
+            candidates.sort(key=self._deadline)   # stable: FIFO on ties
+        batch, seen_ids = [], set()
+        for r in candidates:
+            if len(batch) == self.batch_slots:
+                break
+            if (self.sigma_pipeline and r.budget.error is not None
+                    and r.query_id in seen_ids):
+                self.diagnostics.sigma_deferrals += 1
+                continue
+            batch.append(r)
+            seen_ids.add(r.query_id)
+        taken = set(map(id, batch))
+        self.queue = [r for r in self.queue if id(r) not in taken]
+        return cls, batch
+
     def step(self) -> int:
         """Serve one batch of same-shape-class queries; returns batch size."""
         if not self.queue:
             return 0
-        cls = self.queue[0]._class
-        batch = [r for r in self.queue if r._class == cls][:self.batch_slots]
-        taken = set(map(id, batch))
-        self.queue = [r for r in self.queue if id(r) not in taken]
+        cls, batch = self._take_batch()
         self.diagnostics.steps += 1
         self.diagnostics.max_batch = max(self.diagnostics.max_batch,
                                          len(batch))
@@ -477,10 +598,14 @@ class JoinServer:
             req.done = True
             req.queue_latency_s = time.perf_counter() - req._submit_t
             self.diagnostics.queue_latency_s += req.queue_latency_s
+            self.diagnostics.queue_latencies.append(req.queue_latency_s)
             self.diagnostics.queries += 1
             d = req.result.diagnostics
             self.diagnostics.shuffled_bytes_saved += float(
                 d.shuffled_bytes_repartition - d.shuffled_bytes_filtered)
+        lat = self.diagnostics.queue_latencies
+        if len(lat) > self.latency_samples:
+            del lat[:len(lat) - self.latency_samples]
         return len(batch)
 
     def run(self, max_steps: int = 10_000) -> None:
@@ -522,15 +647,24 @@ class JoinServer:
                            jnp.stack([r.rels[s].valid for r in reqs]))
                   for s in range(cls.n_inputs)]
         seeds = jnp.asarray([r.seed for r in reqs], jnp.uint32)
+        fseeds = jnp.asarray([r.seed if r.filter_seed is None
+                              else r.filter_seed for r in reqs], jnp.uint32)
         num_blocks = bloom.num_blocks_for(max(cls.caps), cls.fp_rate)
         # words are fetched per REAL request only (pad slots replay the last
-        # request's words) so the build/reuse counters stay honest
-        per_req = [
-            jnp.stack([self._words_for(r.rels[s], r._fps[s], num_blocks,
-                                       r.seed) for s in range(cls.n_inputs)])
-            for r in batch]
+        # request's words) so the build/reuse counters stay honest; a
+        # streaming request carries its window's pre-merged words instead
+        per_req = []
+        for r in batch:
+            if r._words is not None:
+                assert len(r._words) == cls.n_inputs, r
+                per_req.append(jnp.stack(list(r._words)))
+            else:
+                fs = r.seed if r.filter_seed is None else r.filter_seed
+                per_req.append(jnp.stack(
+                    [self._words_for(r.rels[s], r._fps[s], num_blocks, fs)
+                     for s in range(cls.n_inputs)]))
         words_b = jnp.stack(per_req + [per_req[-1]] * (B - len(batch)))
-        return B, rels_b, words_b, seeds, num_blocks
+        return B, rels_b, words_b, seeds, fseeds, num_blocks
 
     def _decide_b_rows(self, cls: ShapeClass, batch, B, population, skeys,
                        strata_slice, d_filter):
@@ -680,7 +814,7 @@ class JoinServer:
     def _run_batch(self, cls: ShapeClass, batch: list[JoinRequest]) -> None:
         """One engine step — single fused dispatch per stage; with a mesh,
         each dispatch spans all devices through the shard_map pipeline."""
-        B, rels_b, words_b, seeds, num_blocks = \
+        B, rels_b, words_b, seeds, fseeds, num_blocks = \
             self._batch_inputs(cls, batch)
         builders = self._stage_builders(cls, num_blocks)
 
@@ -692,9 +826,9 @@ class JoinServer:
             # charging one-off trace+compile seconds would zero out every
             # latency budget on the first batch of a shape class.
             jax.block_until_ready(
-                prepare(rels_b, words_b, seeds).strata.counts)
+                prepare(rels_b, words_b, fseeds).strata.counts)
         t0 = time.perf_counter()
-        prep = prepare(rels_b, words_b, seeds)
+        prep = prepare(rels_b, words_b, fseeds)
         jax.block_until_ready(prep.strata.counts)
         d_filter = time.perf_counter() - t0
         self.diagnostics.filter_s += d_filter

@@ -26,6 +26,16 @@ A backend is any ``fn(rels, seed) -> (estimate, error_bound, count, stats)``
 with floats and an optional :class:`~repro.core.estimators.StratumStats`-like
 pytree (any slot layout — canonical [S] or concatenated per-device [k*S];
 the checks are per-stratum sums, layout-free).
+
+:func:`run_stream_accuracy_gate` restates the same contract **per window**
+for a streaming backend: every replication is one tumbling window delivered
+as micro-batches, checked against the exact join of exactly that window's
+tuples — so a window whose estimate leaked expired data, missed a
+micro-batch, or reported a stale bound fails the gate the same way a biased
+static backend does.  A stream backend is
+``fn(micro_batches, w) -> (estimate, error_bound, count, stats)`` where
+``micro_batches`` is a list of per-side Relation lists (``stats`` may be
+None on windows whose allocation is sigma-fed rather than pilot-fed).
 """
 
 from __future__ import annotations
@@ -35,6 +45,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.baselines import repartition_join
+from repro.core.relation import Relation
 from repro.data.synthetic import overlapping_relations
 
 
@@ -113,46 +124,128 @@ def _workload(cfg: GateConfig, r: int):
     return rels, _TRUTH_CACHE[key]
 
 
-def run_accuracy_gate(backend, cfg: GateConfig = GateConfig()) -> GateReport:
-    """Run R replications of ``backend`` against exact ground truth."""
-    hits, rel_errs, rel_bounds, count_errs = 0, [], [], []
-    alloc_bad, checked_alloc = 0, False
-    for r in range(cfg.replications):
-        rels, (t_sum, t_cnt) = _workload(cfg, r)
-        est, bound, cnt, stats = backend(rels, cfg.seed + 7919 + r)
-        hits += abs(est - t_sum) <= bound
-        rel_errs.append(abs(est - t_sum) / max(abs(t_sum), 1e-9))
-        rel_bounds.append(bound / max(abs(t_sum), 1e-9))
-        count_errs.append(abs(cnt - t_cnt) / max(t_cnt, 1.0))
+class _Collector:
+    """Accumulates per-replication measurements and applies the checks —
+    shared by the static and per-window gates (one contract, two drivers)."""
+
+    def __init__(self, pilot_fraction: float, b_max: int):
+        self.pilot_fraction, self.b_max = pilot_fraction, b_max
+        self.hits, self.n = 0, 0
+        self.rel_errs, self.rel_bounds, self.count_errs = [], [], []
+        self.alloc_bad, self.checked_alloc = 0, False
+
+    def add(self, est, bound, cnt, stats, t_sum, t_cnt) -> None:
+        self.n += 1
+        self.hits += abs(est - t_sum) <= bound
+        self.rel_errs.append(abs(est - t_sum) / max(abs(t_sum), 1e-9))
+        self.rel_bounds.append(bound / max(abs(t_sum), 1e-9))
+        self.count_errs.append(abs(cnt - t_cnt) / max(t_cnt, 1.0))
         if stats is not None:
-            checked_alloc = True
+            self.checked_alloc = True
             pop = np.asarray(stats.population, np.float64)
             drawn = np.where(np.asarray(stats.valid),
                              np.asarray(stats.n_sampled, np.float64), 0.0)
-            want = expected_allocation(pop, cfg.pilot_fraction, cfg.b_max)
-            alloc_bad += int(np.sum(want != drawn))
+            want = expected_allocation(pop, self.pilot_fraction, self.b_max)
+            self.alloc_bad += int(np.sum(want != drawn))
 
-    rep = GateReport(
-        replications=cfg.replications,
-        coverage=hits / cfg.replications,
-        nominal=cfg.confidence,
-        mean_rel_err=float(np.mean(rel_errs)),
-        mean_rel_bound=float(np.mean(rel_bounds)),
-        max_count_rel_err=float(np.max(count_errs)),
-        alloc_mismatches=alloc_bad,
-        checked_allocation=checked_alloc)
-    if rep.coverage < cfg.confidence - cfg.coverage_slack:
-        rep.failures.append(
-            f"coverage {rep.coverage:.3f} < "
-            f"{cfg.confidence - cfg.coverage_slack:.3f}")
-    if rep.mean_rel_err > rep.mean_rel_bound:
-        rep.failures.append(
-            f"mean relative error {rep.mean_rel_err:.4f} exceeds the mean "
-            f"CLT relative bound {rep.mean_rel_bound:.4f}")
-    if rep.max_count_rel_err > cfg.count_rtol:
-        rep.failures.append(
-            f"count rel err {rep.max_count_rel_err:.2e} > {cfg.count_rtol}")
-    if alloc_bad:
-        rep.failures.append(
-            f"{alloc_bad} strata drew != the stratified allocation")
-    return rep
+    def report(self, confidence: float, coverage_slack: float,
+               count_rtol: float) -> GateReport:
+        rep = GateReport(
+            replications=self.n,
+            coverage=self.hits / max(self.n, 1),
+            nominal=confidence,
+            mean_rel_err=float(np.mean(self.rel_errs)),
+            mean_rel_bound=float(np.mean(self.rel_bounds)),
+            max_count_rel_err=float(np.max(self.count_errs)),
+            alloc_mismatches=self.alloc_bad,
+            checked_allocation=self.checked_alloc)
+        if rep.coverage < confidence - coverage_slack:
+            rep.failures.append(
+                f"coverage {rep.coverage:.3f} < "
+                f"{confidence - coverage_slack:.3f}")
+        if rep.mean_rel_err > rep.mean_rel_bound:
+            rep.failures.append(
+                f"mean relative error {rep.mean_rel_err:.4f} exceeds the "
+                f"mean CLT relative bound {rep.mean_rel_bound:.4f}")
+        if rep.max_count_rel_err > count_rtol:
+            rep.failures.append(
+                f"count rel err {rep.max_count_rel_err:.2e} > {count_rtol}")
+        if self.alloc_bad:
+            rep.failures.append(
+                f"{self.alloc_bad} strata drew != the stratified allocation")
+        return rep
+
+
+def run_accuracy_gate(backend, cfg: GateConfig = GateConfig()) -> GateReport:
+    """Run R replications of ``backend`` against exact ground truth."""
+    col = _Collector(cfg.pilot_fraction, cfg.b_max)
+    for r in range(cfg.replications):
+        rels, (t_sum, t_cnt) = _workload(cfg, r)
+        est, bound, cnt, stats = backend(rels, cfg.seed + 7919 + r)
+        col.add(est, bound, cnt, stats, t_sum, t_cnt)
+    return col.report(cfg.confidence, cfg.coverage_slack, cfg.count_rtol)
+
+
+# ---------------------------------------------------------------------------
+# Per-window gate for streaming backends: each replication is one tumbling
+# window delivered as micro-batches; truth is the exact join of exactly that
+# window's tuples (so leaked expired data or a missed micro-batch fails).
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class StreamGateConfig:
+    """Workload + thresholds of one per-window accuracy-gate run."""
+
+    windows: int = 12          # replications (one per tumbling window)
+    window_size: int = 4       # micro-batches (sub-windows) per window
+    rows_per_window: int = 2048
+    keys_per_dataset: int = 256
+    overlap: float = 0.25
+    pilot_fraction: float = 0.1
+    b_max: int = 256
+    max_strata: int = 512
+    confidence: float = 0.95
+    coverage_slack: float = 0.05
+    count_rtol: float = 1e-6
+    seed: int = 0
+
+    @property
+    def rows_per_sub(self) -> int:
+        assert self.rows_per_window % self.window_size == 0
+        return self.rows_per_window // self.window_size
+
+
+def stream_window_workload(cfg: StreamGateConfig, w: int):
+    """Window w's micro-batch stream + its exact ground truth.
+
+    The window's relations are drawn like the static gate's (fresh keys and
+    values per window — independent replications), then sliced into
+    ``window_size`` per-side micro-batches; the streaming engine must
+    reassemble exactly this window.
+    """
+    rels = overlapping_relations(
+        [cfg.rows_per_window] * 2, cfg.overlap,
+        keys_per_dataset=cfg.keys_per_dataset, seed=cfg.seed + w)
+    rs = cfg.rows_per_sub
+    mbs = [[Relation(r.keys[m * rs:(m + 1) * rs],
+                     r.values[m * rs:(m + 1) * rs],
+                     r.valid[m * rs:(m + 1) * rs]) for r in rels]
+           for m in range(cfg.window_size)]
+    key = ("stream", cfg.rows_per_window, cfg.keys_per_dataset, cfg.overlap,
+           cfg.seed + w)
+    if key not in _TRUTH_CACHE:
+        truth = repartition_join(rels, expr="sum")
+        _TRUTH_CACHE[key] = (float(truth.estimate), float(truth.count))
+    return mbs, _TRUTH_CACHE[key]
+
+
+def run_stream_accuracy_gate(stream_backend,
+                             cfg: StreamGateConfig = StreamGateConfig()
+                             ) -> GateReport:
+    """Per-window statistical contract of a streaming join backend."""
+    col = _Collector(cfg.pilot_fraction, cfg.b_max)
+    for w in range(cfg.windows):
+        mbs, (t_sum, t_cnt) = stream_window_workload(cfg, w)
+        est, bound, cnt, stats = stream_backend(mbs, w)
+        col.add(est, bound, cnt, stats, t_sum, t_cnt)
+    return col.report(cfg.confidence, cfg.coverage_slack, cfg.count_rtol)

@@ -205,6 +205,62 @@ def test_dataset_filter_words_built_once(rng):
     assert srv.diagnostics.filter_builds == 4
 
 
+def test_sigma_pipeline_matches_sequential_driver(rng):
+    """Cross-step sigma pipelining: same-query_id error-budget repeats
+    submitted together are deferred one step each, so every repeat sees the
+    previous execution's measured sigma — bit-identical to a sequential
+    driver threading feedback through one registry."""
+    r1, r2 = make_pair(rng, n=1 << 12)
+    srv = JoinServer(batch_slots=4)
+    qs = [srv.submit(_req([r1, r2], QueryBudget(error=0.5), "tenant", seed=s))
+          for s in range(3)]
+    srv.run()
+    assert srv.diagnostics.steps == 3           # one repeat per step
+    assert srv.diagnostics.sigma_deferrals == 3
+    reg = SigmaRegistry()
+    for s in range(3):
+        direct = approx_join([r1, r2], QueryBudget(error=0.5), max_strata=MS,
+                             b_max=BM, seed=s, sigma_registry=reg,
+                             query_id="tenant")
+        assert _identical(qs[s].result, direct), s
+
+
+def test_sigma_pipeline_fills_slots_with_other_tenants(rng):
+    """Deferred repeats must not cost throughput when the queue has id
+    diversity: alternating tenants keep every batch full, so N rounds of two
+    tenants take exactly N steps — same as without pipelining."""
+    r1, r2 = make_pair(rng, n=1 << 12)
+    srv = JoinServer(batch_slots=2)
+    for q in range(3):
+        srv.submit(_req([r1, r2], QueryBudget(error=0.5), "A", seed=q))
+        srv.submit(_req([r1, r2], QueryBudget(error=0.5), "B", seed=q))
+    srv.run()
+    assert srv.diagnostics.steps == 3
+    assert srv.diagnostics.max_batch == 2
+
+    # opting out restores co-batching: all three same-id repeats in one step
+    srv2 = JoinServer(batch_slots=4, sigma_pipeline=False)
+    for q in range(3):
+        srv2.submit(_req([r1, r2], QueryBudget(error=0.5), "A", seed=q))
+    srv2.run()
+    assert srv2.diagnostics.steps == 1
+    assert srv2.diagnostics.sigma_deferrals == 0
+
+
+def test_queue_latency_percentiles(rng):
+    r1, r2 = make_pair(rng, n=1 << 11)
+    srv = JoinServer(batch_slots=2)
+    qs = [srv.submit(_req([r1, r2], QueryBudget(error=0.5), f"t{q}", seed=q))
+          for q in range(4)]
+    srv.run()
+    snap = srv.diagnostics.snapshot()
+    assert "queue_latencies" not in snap        # raw ring stays internal
+    assert 0 < snap["queue_latency_p50_s"] <= snap["queue_latency_p95_s"] \
+        <= snap["queue_latency_max_s"]
+    assert snap["queue_latency_max_s"] == \
+        pytest.approx(max(q.queue_latency_s for q in qs))
+
+
 def test_kernel_route_served_per_query(rng):
     r1, r2 = make_pair(rng, n=1 << 11)
     srv = JoinServer(batch_slots=2)

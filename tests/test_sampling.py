@@ -5,10 +5,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from conftest import hypothesis_or_stubs
+from repro.core.hashing import hash2
 from repro.core.relation import relation, sort_by_key
 from repro.core.sampling import (build_strata, exact_count,
                                  exact_sum_of_products, exact_sum_of_sums,
-                                 sample_edges)
+                                 reservoir_empty, reservoir_extend,
+                                 reservoir_fill, reservoir_merge,
+                                 reservoir_moments, sample_edges)
 
 given, settings, st = hypothesis_or_stubs()
 
@@ -124,6 +127,102 @@ def test_strata_overflow_counted():
     strata = build_strata([r1, r2], max_strata=32)
     assert int(strata.overflow) == 100 - 32
     assert int(strata.num_strata) == 32
+
+
+# ---------------------------------------------------------------------------
+# Merge-able per-stratum reservoirs (the streaming sketch).
+# ---------------------------------------------------------------------------
+
+def _batch(seed, n=256, hi=1000):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, hi, n).astype(np.uint32),
+            rng.normal(3.0, 2.0, n).astype(np.float32),
+            rng.random(n) < 0.9)
+
+
+def test_reservoir_under_capacity_keeps_exact_multiset():
+    keys, vals, valid = _batch(0, n=100)
+    res = reservoir_extend(reservoir_empty(8, 100), jnp.asarray(keys),
+                           jnp.asarray(vals), jnp.asarray(valid), 5, 0)
+    got = np.sort(np.asarray(res.values)[
+        np.asarray(res.priority) != np.uint32(0xFFFFFFFF)])
+    np.testing.assert_array_equal(got, np.sort(vals[valid]))
+    # n_seen counts offered valid rows per hash stratum
+    sid = np.asarray(hash2(jnp.asarray(keys), 5)) % 8
+    want = np.bincount(sid[valid], minlength=8)
+    np.testing.assert_array_equal(np.asarray(res.n_seen), want)
+    np.testing.assert_array_equal(np.asarray(reservoir_fill(res)), want)
+
+
+def test_reservoir_bounded_overflow():
+    keys, vals, valid = _batch(1, n=2048)
+    res = reservoir_empty(4, 16)
+    for tick in range(3):
+        res = reservoir_extend(res, jnp.asarray(keys), jnp.asarray(vals),
+                               jnp.asarray(valid), 5, tick)
+    fill = np.asarray(reservoir_fill(res))
+    np.testing.assert_array_equal(fill, np.full(4, 16))       # saturated
+    assert float(np.asarray(res.n_seen).sum()) == 3 * valid.sum()
+    # kept values are a subset of the offered ones
+    assert set(np.asarray(res.values).ravel().tolist()) <= \
+        set(vals[valid].tolist())
+
+
+def test_reservoir_merge_equals_sequential_extend():
+    """Bottom-k by item-identity priorities: folding batches sequentially
+    and merging independently-folded reservoirs agree BIT-FOR-BIT."""
+    a, b = _batch(2), _batch(3)
+    empty = reservoir_empty(8, 32)
+
+    def fold(res, batch, tick):
+        keys, vals, valid = batch
+        return reservoir_extend(res, jnp.asarray(keys), jnp.asarray(vals),
+                                jnp.asarray(valid), 5, tick)
+
+    seq = fold(fold(empty, a, 0), b, 1)
+    merged = reservoir_merge(fold(empty, a, 0), fold(empty, b, 1))
+    for f in ("priority", "values", "n_seen"):
+        np.testing.assert_array_equal(np.asarray(getattr(seq, f)),
+                                      np.asarray(getattr(merged, f)), f)
+
+
+def test_reservoir_moments_match_numpy():
+    keys, vals, valid = _batch(4, n=200)
+    res = reservoir_extend(reservoir_empty(4, 200), jnp.asarray(keys),
+                           jnp.asarray(vals), jnp.asarray(valid), 7, 0)
+    n, mean, var = reservoir_moments(res)
+    sid = np.asarray(hash2(jnp.asarray(keys), 7)) % 4
+    for s in range(4):
+        v = vals[valid & (sid == s)].astype(np.float64)
+        assert float(n[s]) == len(v)
+        np.testing.assert_allclose(float(mean[s]), v.mean(), rtol=1e-5)
+        np.testing.assert_allclose(float(var[s]), v.var(ddof=1), rtol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000), st.integers(1, 300), st.integers(1, 300))
+def test_reservoir_merge_property(seed, n1, n2):
+    rng = np.random.default_rng(seed)
+    empty = reservoir_empty(4, 24)
+
+    def fold(res, n, tick):
+        keys = rng.integers(0, 50, n).astype(np.uint32)
+        vals = rng.normal(0, 1, n).astype(np.float32)
+        return keys, vals, reservoir_extend(
+            res, jnp.asarray(keys), jnp.asarray(vals),
+            jnp.ones(n, bool), 11, tick)
+
+    k1, v1, ra = fold(empty, n1, 0)
+    rng2 = np.random.default_rng(seed)        # replay the same draws
+    _ = rng2.integers(0, 50, n1), rng2.normal(0, 1, n1)
+    k2, v2, seq = fold(ra, n2, 1)
+    rb = reservoir_extend(empty, jnp.asarray(k2), jnp.asarray(v2),
+                          jnp.ones(n2, bool), 11, 1)
+    merged = reservoir_merge(ra, rb)
+    np.testing.assert_array_equal(np.asarray(seq.priority),
+                                  np.asarray(merged.priority))
+    np.testing.assert_array_equal(np.asarray(seq.values),
+                                  np.asarray(merged.values))
 
 
 def test_three_way_strata_and_exact():
