@@ -20,6 +20,12 @@ Re-execs itself under ``--xla_force_host_platform_device_count=8`` when
 needed:
 
   PYTHONPATH=src python -m benchmarks.serve_bench --distributed
+
+``--kernels`` runs the Pallas-path regression gate instead: batched kernel
+serving must beat the retired per-query kernel loop on q/s, bit-identically
+per slot of a mixed-seed batch, with zero recompiles/filter rebuilds after
+warmup (seeds are runtime kernel operands) — asserted — and writes the
+``BENCH_kernel.json`` artifact.
 """
 
 from __future__ import annotations
@@ -110,6 +116,114 @@ def run() -> list[dict]:
             queue_latency_max_s=round(snap["queue_latency_max_s"], 4)),
         row("serve", mode="speedup",
             x=round((served / serve_s) / (cold_n / cold_s), 2)),
+    ]
+
+
+def run_kernels() -> list[dict]:
+    """Batched Pallas serving vs the retired per-query kernel loop.
+
+    The baseline is exactly what ``JoinServer._run_kernel`` used to do: one
+    direct ``approx_join(use_kernels=True)`` per query.  The engine must
+    (a) beat it on q/s by batching kernel queries through the stacked
+    ``(batch_slot, ...)`` grids, (b) show ZERO recompiles and ZERO filter
+    rebuilds after warmup across a mixed-seed sweep and mixed batch fills
+    (seeds are runtime kernel operands), and (c) stay bit-identical to the
+    per-query driver for every slot of a mixed-seed batch — all asserted
+    here, making this bench the kernel-path regression gate.
+    """
+    rels = _workload(seed=7)["small"]
+    queries = SLOTS * ROUNDS
+    segments = 3                          # best-of-3 (timing noise guard)
+
+    # --- per-query kernel baseline ----------------------------------------
+    # two warm calls off the clock: the first compiles the kernel wrappers
+    # (pilot round), the second the sigma-fed decide path (t-quantile etc.)
+    reg = SigmaRegistry()
+    for s in (98, 99):
+        approx_join(rels, QueryBudget(error=0.5), max_strata=MAX_STRATA,
+                    b_max=B_MAX, seed=s, use_kernels=True,
+                    sigma_registry=reg, query_id="warm")
+    perq_s = float("inf")
+    for seg in range(segments):
+        t0 = time.perf_counter()
+        for q in range(queries):
+            approx_join(rels, QueryBudget(error=0.5), max_strata=MAX_STRATA,
+                        b_max=B_MAX, seed=100 + q, use_kernels=True,
+                        sigma_registry=reg, query_id=f"k/sum{q % SLOTS}")
+        perq_s = min(perq_s, time.perf_counter() - t0)
+
+    # --- batched kernel server --------------------------------------------
+    server = JoinServer(batch_slots=SLOTS)
+    server.register_dataset("k", rels)
+
+    def submit(q, qid=None):
+        # fixed filter_seed + per-query sampling seeds: the dataset words
+        # build once, every seed rides the same compiled executables
+        return server.submit(JoinRequest(
+            dataset="k", budget=QueryBudget(error=0.5),
+            query_id=qid or f"k/sum{q % SLOTS}", seed=100 + q, filter_seed=7,
+            max_strata=MAX_STRATA, b_max=B_MAX, use_kernels=True))
+
+    for r in range(2):                   # full fills: pilot + sigma rounds
+        for q in range(SLOTS):
+            submit(8 * r + q)
+        server.run()
+    submit(0, "odd0"), submit(1, "odd1")  # partial (2-wide) fill
+    server.run()
+    warm = server.diagnostics.snapshot()
+
+    serve_s, served_seg = float("inf"), 0
+    for seg in range(segments):
+        for q in range(queries):
+            submit(SLOTS + q)
+        for q in range(2):               # mixed fills in the timed phase
+            submit(SLOTS + queries + q, f"odd{q}")
+        t0 = time.perf_counter()
+        server.run()
+        dt = time.perf_counter() - t0
+        if dt < serve_s:
+            serve_s, served_seg = dt, queries + 2
+    d = server.diagnostics
+    recompiles = d.compiles - warm["compiles"]
+    assert recompiles == 0, \
+        f"kernel classes recompiled after warmup: {recompiles}"
+    assert d.filter_builds == warm["filter_builds"], \
+        "seed sweep rebuilt dataset filter words"
+    assert d.kernel_gather_bytes == 0.0, d.kernel_gather_bytes
+    served = served_seg
+
+    # --- per-slot bit-identity of one mixed-seed batch --------------------
+    seeds = (301, 17, 301, 995)
+    bq = [server.submit(JoinRequest(
+        rels=rels, budget=QueryBudget(error=0.5), query_id=f"bit{i}",
+        seed=s, max_strata=MAX_STRATA, b_max=B_MAX, use_kernels=True))
+        for i, s in enumerate(seeds)]
+    assert server.step() == len(seeds)
+    for req, s in zip(bq, seeds):
+        direct = approx_join(rels, QueryBudget(error=0.5),
+                             max_strata=MAX_STRATA, b_max=B_MAX, seed=s,
+                             use_kernels=True)
+        assert (float(req.result.estimate) == float(direct.estimate)
+                and float(req.result.error_bound)
+                == float(direct.error_bound)
+                and float(req.result.count) == float(direct.count)), \
+            f"slot seed {s} diverged from per-query approx_join"
+
+    perq_qps = queries / perq_s
+    serve_qps = served / serve_s
+    assert serve_qps > perq_qps, \
+        f"batched kernel path lost to per-query: {serve_qps} <= {perq_qps}"
+    return [
+        row("serve", mode="kernel/per-query", queries=queries,
+            seconds=round(perq_s, 3), qps=round(perq_qps, 2)),
+        row("serve", mode="kernel/batched", queries=served,
+            seconds=round(serve_s, 3), qps=round(serve_qps, 2),
+            recompiles_after_warmup=recompiles,
+            filter_builds=d.filter_builds,
+            kernel_gather_bytes=round(d.kernel_gather_bytes),
+            max_batch=d.max_batch),
+        row("serve", mode="kernel/speedup",
+            x=round(serve_qps / perq_qps, 2)),
     ]
 
 
@@ -225,6 +339,16 @@ def main() -> None:
     if "--distributed-child" in sys.argv:
         for r in _all_distributed_legs():
             print(json.dumps(r), flush=True)
+        return
+    if "--kernels" in sys.argv:
+        # kernel-path regression gate: batched Pallas serving must beat the
+        # per-query kernel baseline, bit-identically, with zero recompiles;
+        # its own artifact rides beside BENCH_serve.json in CI
+        krows = run_kernels()
+        with open("BENCH_kernel.json", "w") as fh:
+            json.dump(krows, fh, indent=1)
+        print("wrote BENCH_kernel.json")
+        print_rows(krows)
         return
     rows = run()
     if "--distributed" in sys.argv:

@@ -110,6 +110,19 @@ class PrepareOut(NamedTuple):
     population: jnp.ndarray    # f32   [S]
 
 
+def _prepare_tail(live: Sequence[Relation], rels: Sequence[Relation],
+                  max_strata: int) -> PrepareOut:
+    """Shared sort/group-by tail of every prepare variant (jnp and kernel,
+    single and batched) — one copy, so the bit-parity contract between the
+    variants cannot drift."""
+    sorted_rels = [sort_by_key(r) for r in live]
+    strata = build_strata(sorted_rels, max_strata)
+    return PrepareOut(sorted_rels, strata,
+                      jnp.stack([r.count() for r in live]),
+                      jnp.stack([r.count() for r in rels]),
+                      strata.population)
+
+
 def prepare_stage(rels: Sequence[Relation], num_blocks: int, max_strata: int,
                   seed) -> PrepareOut:
     """Filter build/AND/probe, sort, group-by — one jit/vmap-friendly pass.
@@ -124,13 +137,8 @@ def prepare_stage(rels: Sequence[Relation], num_blocks: int, max_strata: int,
     for f in filters[1:]:
         words = words & f.words
     join_filter = bloom.BloomFilter(words, seed)
-    live = filter_relations(rels, join_filter)
-    sorted_rels = [sort_by_key(r) for r in live]
-    strata = build_strata(sorted_rels, max_strata)
-    return PrepareOut(sorted_rels, strata,
-                      jnp.stack([r.count() for r in live]),
-                      jnp.stack([r.count() for r in rels]),
-                      strata.population)
+    return _prepare_tail(filter_relations(rels, join_filter), rels,
+                         max_strata)
 
 
 def prepare_stage_pre(rels: Sequence[Relation], filter_words: jnp.ndarray,
@@ -147,13 +155,69 @@ def prepare_stage_pre(rels: Sequence[Relation], filter_words: jnp.ndarray,
     for i in range(1, filter_words.shape[0]):
         words = words & filter_words[i]
     join_filter = bloom.BloomFilter(words, seed)
-    live = filter_relations(rels, join_filter)
-    sorted_rels = [sort_by_key(r) for r in live]
-    strata = build_strata(sorted_rels, max_strata)
-    return PrepareOut(sorted_rels, strata,
-                      jnp.stack([r.count() for r in live]),
-                      jnp.stack([r.count() for r in rels]),
-                      strata.population)
+    return _prepare_tail(filter_relations(rels, join_filter), rels,
+                         max_strata)
+
+
+def prepare_stage_kernels(rels: Sequence[Relation], num_blocks: int,
+                          max_strata: int, seed, *,
+                          filter_words: Optional[jnp.ndarray] = None,
+                          interpret: bool = True) -> PrepareOut:
+    """Kernel-backed :func:`prepare_stage` / :func:`prepare_stage_pre`.
+
+    Same stage contract, Pallas execution: per-input filters come from the
+    hash kernel + scatter-OR commit (or arrive PREBUILT as ``filter_words``
+    ``[n_inputs, num_blocks, W]`` — e.g. the serving engine's per-dataset
+    cache), the AND-merge happens on the packed words, and the probe runs
+    through the VMEM-resident filter kernel.  ``seed`` is the FILTER seed
+    and may be a traced array (the engine's decoupled ``filter_seed``);
+    results are bit-identical to the jnp stages — the kernels share the
+    uint32 hash math (asserted in ``tests/test_kernels.py``).
+    """
+    from repro.kernels import ops as kops
+    if filter_words is None:
+        words = kops.build_filter(rels[0].keys, rels[0].valid, num_blocks,
+                                  seed, interpret=interpret).words
+        for r in rels[1:]:
+            words = words & kops.build_filter(r.keys, r.valid, num_blocks,
+                                              seed, interpret=interpret).words
+    else:
+        words = filter_words[0]
+        for i in range(1, filter_words.shape[0]):
+            words = words & filter_words[i]
+    live = [Relation(r.keys, r.values,
+                     r.valid & kops.probe_filter(words, r.keys, seed,
+                                                 interpret=interpret))
+            for r in rels]
+    return _prepare_tail(live, rels, max_strata)
+
+
+def prepare_stage_kernels_batched(rels: Sequence[Relation],
+                                  filter_words: jnp.ndarray,
+                                  max_strata: int, seeds, *,
+                                  interpret: bool = True) -> PrepareOut:
+    """Slot-batched kernel prepare: the engine's fused-batch counterpart.
+
+    ``rels`` carry slot-stacked ``[B, N]`` arrays, ``filter_words`` is
+    ``[B, n_inputs, num_blocks, W]`` (per-slot prebuilt words — the engine
+    always has them, from its per-dataset cache or a streaming window's
+    OR-merge), ``seeds`` is uint32 ``[B]``.  The AND-merge and the probe run
+    through the stacked-filter kernel over a ``(batch_slot, key_block)``
+    grid — NOT vmap: the probe kernel owns the slot dimension — and the
+    sort/group-by tail vmaps per slot exactly like the jnp path, so every
+    slot is bit-identical to :func:`prepare_stage_kernels` on its own.
+    """
+    from repro.kernels import ops as kops
+    jwords = filter_words[:, 0]
+    for i in range(1, filter_words.shape[1]):
+        jwords = jwords & filter_words[:, i]
+    live = [Relation(r.keys, r.values,
+                     r.valid & kops.probe_filter_batched(
+                         jwords, r.keys, seeds, interpret=interpret))
+            for r in rels]
+    return jax.vmap(
+        lambda live_i, rels_i: _prepare_tail(live_i, rels_i, max_strata))(
+        live, list(rels))
 
 
 def exact_stage(sorted_rels: Sequence[Relation], strata: Strata, *,
@@ -219,6 +283,61 @@ def sample_stage(sorted_rels: Sequence[Relation], strata: Strata,
     value, err, cnt, dof = estimate_stage(sample, agg=agg, dedup=dedup,
                                           confidence=confidence)
     return value, err, cnt, dof, sample.stats
+
+
+def _kernel_sample_result(stats: StratumStats) -> SampleResult:
+    """Wrap kernel StratumStats as a SampleResult (non-dedup: the HT/dedup
+    fields are unused by :func:`estimate_stage`, stubbed to zeros)."""
+    zeros = stats.sum_f * 0
+    return SampleResult(stats, zeros, zeros,
+                        jnp.zeros((1, 1)), jnp.zeros((1, 1), bool))
+
+
+def sample_stage_kernels(sorted_rels: Sequence[Relation], strata: Strata,
+                         b_i: jnp.ndarray, b_max: int, seed, *,
+                         agg: str = "sum", confidence: float = 0.95,
+                         expr: str = "sum",
+                         interpret: bool = True):
+    """Kernel-backed :func:`sample_stage` (two-way, non-dedup): the fused
+    draw->gather->f->reduce Pallas sampler + the shared estimate stage."""
+    from repro.kernels import ops as kops
+    stats = kops.sample_stats(sorted_rels, strata, b_i, b_max, seed, expr,
+                              interpret=interpret)
+    value, err, cnt, dof = estimate_stage(
+        _kernel_sample_result(stats), agg=agg, dedup=False,
+        confidence=confidence)
+    return value, err, cnt, dof, stats
+
+
+def sample_stage_kernels_batched(sorted_rels: Sequence[Relation],
+                                 strata: Strata, b_i: jnp.ndarray,
+                                 b_max: int, seeds, *,
+                                 agg: str = "sum", confidence: float = 0.95,
+                                 expr: str = "sum", interpret: bool = True):
+    """Slot-batched kernel sample stage (engine counterpart).
+
+    Inputs are slot-stacked (``[B, ...]`` leaves, as emitted by the batched
+    prepare); the fused sampler runs the ``(batch_slot, strata_block)``
+    kernel grid directly — the slot dimension belongs to the kernel, not
+    vmap — and the estimator finish vmaps per slot.  The batched Strata
+    pytree's reducing properties (``joinable``/``population``) cannot be
+    read off batched leaves, so they are recomputed here over the per-slot
+    axes (same arithmetic, one axis over).
+    """
+    from repro.kernels import ops as kops
+    joinable = strata.valid & jnp.all(strata.counts > 0, axis=1)
+    population = jnp.where(
+        joinable,
+        jnp.prod(jnp.maximum(strata.counts, 0).astype(jnp.float32), axis=1),
+        0.0)
+    stats = kops.sample_stats_batched(
+        sorted_rels[0].values, sorted_rels[1].values,
+        strata.keys, strata.starts, strata.counts, joinable, population,
+        b_i, seeds, b_max, expr, interpret=interpret)
+    value, err, cnt, dof = jax.vmap(
+        lambda s: estimate_stage(_kernel_sample_result(s), agg=agg,
+                                 dedup=False, confidence=confidence))(stats)
+    return value, err, cnt, dof, stats
 
 
 def _pilot_sizes(population, fraction: float) -> jnp.ndarray:
@@ -288,20 +407,8 @@ def approx_join(rels: Sequence[Relation],
     if use_kernels:
         from repro.kernels import ops as kops
         interp = kops.use_interpret()
-        filters = [kops.build_filter(r.keys, r.valid, num_blocks, seed,
-                                     interpret=interp) for r in rels]
-        join_filter = bloom.intersect_all(filters)
-        live = [Relation(r.keys, r.values,
-                         r.valid & kops.probe_filter(join_filter.words,
-                                                     r.keys, seed,
-                                                     interpret=interp))
-                for r in rels]
-        sorted_rels = [sort_by_key(r) for r in live]
-        kstrata = build_strata(sorted_rels, S)
-        prep = PrepareOut(sorted_rels, kstrata,
-                          jnp.stack([r.count() for r in live]),
-                          jnp.stack([r.count() for r in rels]),
-                          kstrata.population)
+        prep = prepare_stage_kernels(rels, num_blocks, S, seed,
+                                     interpret=interp)
     else:
         prep = prepare_stage(rels, num_blocks, S, seed)
     sorted_rels, strata = prep.sorted_rels, prep.strata
@@ -356,15 +463,14 @@ def approx_join(rels: Sequence[Relation],
 
     # --- stage 4+5: sample during join + estimate (§3.3, §3.4) ---
     if use_kernels and not dedup and n == 2 and f is None:
-        from repro.kernels import ops as kops
-        stats = kops.sample_stats(sorted_rels, strata, b_i, b_max, seed + 1,
-                                  expr)
-        sample = SampleResult(stats, stats.sum_f * 0, stats.sum_f * 0,
-                              jnp.zeros((1, 1)), jnp.zeros((1, 1), bool))
+        value, err, cnt, dof, kstats = sample_stage_kernels(
+            sorted_rels, strata, b_i, b_max, seed + 1, agg=agg,
+            confidence=budget.confidence, expr=expr, interpret=interp)
+        sample = _kernel_sample_result(kstats)
     else:
         sample = sample_edges(sorted_rels, strata, b_i, b_max, seed + 1, f_fn)
-    value, err, cnt, dof = estimate_stage(sample, agg=agg, dedup=dedup,
-                                          confidence=budget.confidence)
+        value, err, cnt, dof = estimate_stage(sample, agg=agg, dedup=dedup,
+                                              confidence=budget.confidence)
 
     # --- feedback: store measured sigma for the next execution (§3.2-II) ---
     if sigma_registry is not None:

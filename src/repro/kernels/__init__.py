@@ -4,6 +4,14 @@
   bloom_probe  — VMEM-resident join-filter membership probe (per-tuple hot path)
   edge_sample  — fused Algorithm-2 sampler (draw -> gather -> f -> reduce)
 
-``ops`` holds the jit'd wrappers; ``ref`` the pure-jnp oracles.  Validated in
-interpret mode on CPU; Mosaic-compiled on a TPU backend.
+Every kernel is BATCHED: a leading slot dimension (one slot per query of a
+serving-engine batch) with a 2-D grid over ``(batch_slot, block)``, stacked
+``[B, num_blocks, 8]`` filters with per-slot VMEM residency, and per-slot
+seeds as runtime array operands — one compiled executable per shape class,
+zero recompiles across seeds.  The single-query entry points are the B = 1
+specialization of the same kernels.
+
+``ops`` holds the jit'd wrappers (and ALL padding); ``ref`` the pure-jnp
+oracles.  Validated in interpret mode on CPU; Mosaic-compiled on a TPU
+backend.
 """

@@ -1,9 +1,16 @@
 """Pallas kernel: Bloom-filter hash computation (build side, Alg. 1 map).
 
-Grid over key blocks; each step loads a [BLOCK] slice of keys into VMEM and
-emits the (block index, 8-lane bit masks) pair for every key — pure VPU
-integer math (murmur3 finalizer + multiply-shift lane hashes), no memory
-traffic beyond the streaming key blocks.
+Batched layout: every array carries a leading SLOT dimension (one slot per
+query of an engine batch) and the grid is 2-D over ``(batch_slot,
+key_block)`` — each step loads a ``[1, BLOCK]`` slice of one slot's keys
+into VMEM and emits the (block index, 8-lane bit masks) pair for every key —
+pure VPU integer math (murmur3 finalizer + multiply-shift lane hashes), no
+memory traffic beyond the streaming key blocks.
+
+Seeds are RUNTIME OPERANDS, not static kernel parameters: each slot's seed
+streams in as a one-element VMEM block indexed by the slot coordinate, so
+one compiled executable serves every seed (the serving engine's
+zero-recompile contract across mixed-seed batches).
 
 The scatter-OR that folds these pairs into the packed filter runs in the jit
 wrapper (XLA scatter): TPU Pallas has no scatter atomics, so committing the
@@ -25,25 +32,45 @@ from repro.core import bloom
 DEFAULT_BLOCK = 2048
 
 
-def _kernel(keys_ref, blk_ref, masks_ref, *, num_blocks: int, seed: int):
-    keys = keys_ref[...]
+def _kernel(seed_ref, keys_ref, blk_ref, masks_ref, *, num_blocks: int):
+    seed = seed_ref[0]                  # this slot's seed (runtime operand)
+    keys = keys_ref[...]                # [1, BLOCK]
     blk_ref[...] = bloom.block_index(keys, num_blocks, seed)
     masks_ref[...] = bloom.lane_masks(keys, seed)
 
 
-def bloom_hashes(keys: jnp.ndarray, num_blocks: int, seed: int = 0,
-                 block: int = DEFAULT_BLOCK, interpret: bool = True):
-    """(block_index int32 [N], lane_masks uint32 [N, 8]); N % block == 0."""
-    n = keys.shape[0]
+def bloom_hashes_batched(keys: jnp.ndarray, seeds: jnp.ndarray,
+                         num_blocks: int, block: int = DEFAULT_BLOCK,
+                         interpret: bool = True):
+    """(block_index int32 [B, N], lane_masks uint32 [B, N, 8]) per slot.
+
+    ``keys`` is ``[B, N]`` with ``N % block == 0`` (wrappers pad);
+    ``seeds`` is uint32 ``[B]`` — a runtime array operand, one per slot.
+    """
+    B, n = keys.shape
     assert n % block == 0, f"pad keys to a multiple of {block} (got {n})"
-    grid = (n // block,)
+    assert seeds.shape == (B,), (seeds.shape, B)
     return pl.pallas_call(
-        functools.partial(_kernel, num_blocks=num_blocks, seed=seed),
-        grid=grid,
-        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
-        out_specs=[pl.BlockSpec((block,), lambda i: (i,)),
-                   pl.BlockSpec((block, 8), lambda i: (i, 0))],
-        out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32),
-                   jax.ShapeDtypeStruct((n, 8), jnp.uint32)],
+        functools.partial(_kernel, num_blocks=num_blocks),
+        grid=(B, n // block),
+        in_specs=[pl.BlockSpec((1,), lambda b, i: (b,)),
+                  pl.BlockSpec((1, block), lambda b, i: (b, i))],
+        out_specs=[pl.BlockSpec((1, block), lambda b, i: (b, i)),
+                   pl.BlockSpec((1, block, 8), lambda b, i: (b, i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((B, n), jnp.int32),
+                   jax.ShapeDtypeStruct((B, n, 8), jnp.uint32)],
         interpret=interpret,
-    )(keys)
+    )(seeds, keys)
+
+
+def bloom_hashes(keys: jnp.ndarray, num_blocks: int, seed=0,
+                 block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """(block_index int32 [N], lane_masks uint32 [N, 8]); N % block == 0.
+
+    Single-slot convenience over :func:`bloom_hashes_batched` (B = 1) —
+    the batched kernel IS the implementation, so the two can never drift.
+    """
+    seeds = jnp.asarray(seed, jnp.uint32).reshape(1)
+    blk, masks = bloom_hashes_batched(keys[None], seeds, num_blocks,
+                                      block=block, interpret=interpret)
+    return blk[0], masks[0]

@@ -1,18 +1,28 @@
 """Pallas kernel: join-filter membership probe (the filter hot path).
 
 Every tuple of every input probes the join filter once (§3.1), so this is
-the paper's dominant per-tuple cost.  Layout:
+the paper's dominant per-tuple cost.  Batched layout (one slot per query of
+an engine batch, 2-D grid over ``(batch_slot, key_block)``):
 
-  * the packed filter ([num_blocks, 8] uint32) stays RESIDENT in VMEM across
-    the whole grid (BlockSpec index_map pins it to (0, 0)) — it is small by
-    construction (Eq. 27: ~1.2 bytes/key at 1% FPR) and every key touches one
-    random 256-bit block of it, which is exactly what VMEM is for;
-  * keys stream through in [BLOCK] slices (double-buffered by Pallas);
+  * the packed filters are STACKED ``[B, num_blocks, 8]`` uint32 with
+    per-slot VMEM residency: the BlockSpec index map pins slot ``b``'s
+    ``[num_blocks, 8]`` filter to ``(b, 0, 0)``, so it stays resident across
+    that slot's whole key sweep and is swapped exactly once per slot — it is
+    small by construction (Eq. 27: ~1.2 bytes/key at 1% FPR) and every key
+    touches one random 256-bit block of it, which is exactly what VMEM is
+    for;
+  * keys stream through in ``[1, BLOCK]`` slices (double-buffered by
+    Pallas);
+  * per-slot seeds are runtime array operands (one-element VMEM blocks), so
+    one compiled executable serves every seed of a mixed-seed batch;
   * per key: one VMEM gather of its 8-word block + lane-mask compare — no
     HBM round-trips per probe, unlike the GPU pointer-chase formulation.
 
-VMEM budget: filter <= ~8 MiB (num_blocks <= 2^18 = 8 Mi keys at 1% FPR per
-shard) + 3 small key/output blocks.  The wrapper asserts this.
+VMEM budget: the whole stacked filter must fit, ``B * filter_bytes`` <= ~8
+MiB (e.g. 8 slots of num_blocks <= 2^15 = 1 Mi keys each at 1% FPR per
+shard) + small key/seed/output blocks.  The wrapper asserts this — the
+budget is deliberately charged for ALL slots even though only one is
+resident per grid step, covering Pallas' cross-slot double buffering.
 """
 
 from __future__ import annotations
@@ -26,33 +36,53 @@ from jax.experimental import pallas as pl
 from repro.core import bloom
 
 DEFAULT_BLOCK = 2048
-VMEM_FILTER_LIMIT = 8 * 1024 * 1024  # bytes of VMEM we allow the filter
+VMEM_FILTER_LIMIT = 8 * 1024 * 1024  # bytes of VMEM we allow the filters
 
 
-def _kernel(words_ref, keys_ref, out_ref, *, num_blocks: int, seed: int):
-    keys = keys_ref[...]
+def _kernel(seed_ref, words_ref, keys_ref, out_ref, *, num_blocks: int):
+    seed = seed_ref[0]                  # this slot's seed (runtime operand)
+    keys = keys_ref[...]                # [1, BLOCK]
     blk = bloom.block_index(keys, num_blocks, seed)
     masks = bloom.lane_masks(keys, seed)
-    words = words_ref[...]              # [num_blocks, 8], VMEM-resident
-    gathered = words[blk]               # [BLOCK, 8] vector gather in VMEM
-    out_ref[...] = jnp.all((gathered & masks) == masks, axis=-1)
+    words = words_ref[...][0]           # [num_blocks, 8], VMEM-resident
+    gathered = words[blk[0]]            # [BLOCK, 8] vector gather in VMEM
+    out_ref[...] = jnp.all((gathered & masks[0]) == masks[0], axis=-1)[None]
 
 
-def bloom_probe(words: jnp.ndarray, keys: jnp.ndarray, seed: int = 0,
+def bloom_probe_batched(words: jnp.ndarray, keys: jnp.ndarray,
+                        seeds: jnp.ndarray, block: int = DEFAULT_BLOCK,
+                        interpret: bool = True) -> jnp.ndarray:
+    """Membership mask bool [B, N]: each slot's keys against its own filter.
+
+    ``words`` is the stacked ``[B, num_blocks, 8]`` filter layout; ``seeds``
+    is uint32 ``[B]`` (runtime operands — zero recompiles across seeds).
+    """
+    B, n = keys.shape
+    nb = words.shape[1]
+    assert words.shape[0] == B and seeds.shape == (B,), \
+        (words.shape, keys.shape, seeds.shape)
+    assert n % block == 0, f"pad keys to a multiple of {block} (got {n})"
+    assert B * nb * 8 * 4 <= VMEM_FILTER_LIMIT, \
+        f"stacked filters too large for VMEM residency: {B * nb * 32} bytes"
+    return pl.pallas_call(
+        functools.partial(_kernel, num_blocks=nb),
+        grid=(B, n // block),
+        in_specs=[pl.BlockSpec((1,), lambda b, i: (b,)),
+                  pl.BlockSpec((1, nb, 8), lambda b, i: (b, 0, 0)),  # pinned
+                  pl.BlockSpec((1, block), lambda b, i: (b, i))],
+        out_specs=pl.BlockSpec((1, block), lambda b, i: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((B, n), jnp.bool_),
+        interpret=interpret,
+    )(seeds, words, keys)
+
+
+def bloom_probe(words: jnp.ndarray, keys: jnp.ndarray, seed=0,
                 block: int = DEFAULT_BLOCK,
                 interpret: bool = True) -> jnp.ndarray:
-    """Membership mask bool [N] for keys against the packed filter words."""
-    n = keys.shape[0]
-    nb = words.shape[0]
-    assert n % block == 0, f"pad keys to a multiple of {block} (got {n})"
-    assert nb * 8 * 4 <= VMEM_FILTER_LIMIT, \
-        f"filter too large for VMEM residency: {nb * 32} bytes"
-    return pl.pallas_call(
-        functools.partial(_kernel, num_blocks=nb, seed=seed),
-        grid=(n // block,),
-        in_specs=[pl.BlockSpec((nb, 8), lambda i: (0, 0)),  # pinned filter
-                  pl.BlockSpec((block,), lambda i: (i,))],
-        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n,), jnp.bool_),
-        interpret=interpret,
-    )(words, keys)
+    """Membership mask bool [N] for keys against the packed filter words.
+
+    Single-slot convenience over :func:`bloom_probe_batched` (B = 1).
+    """
+    seeds = jnp.asarray(seed, jnp.uint32).reshape(1)
+    return bloom_probe_batched(words[None], keys[None], seeds, block=block,
+                               interpret=interpret)[0]

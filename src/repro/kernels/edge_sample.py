@@ -9,17 +9,24 @@ go back to HBM.  That turns the sampling stage from memory-bound to
 VPU-bound — the TPU restatement of the paper's "sampling beats building the
 bipartite graph" insight.
 
-Layout per grid step (strata block of S_BLOCK rows):
-  * both sides' sorted value arrays are VMEM-resident (pinned BlockSpec);
-    the per-draw gather is segment-local by construction (rows are sorted by
+Batched layout (one slot per query of an engine batch): every operand has a
+leading slot dimension and the grid is 2-D over ``(batch_slot,
+strata_block)``.  Per grid step (slot ``b``, strata block of S_BLOCK rows):
+
+  * both sides' sorted value arrays are VMEM-resident PER SLOT (the
+    BlockSpec index map pins slot ``b``'s whole array to ``(b, 0)``); the
+    per-draw gather is segment-local by construction (rows are sorted by
     key) but may touch anywhere in the array, so residency is required —
-    the wrapper asserts the <= ~8 MiB per side budget and production shards
-    relations below it (a 1 Mi-row shard = 4 MiB).
-  * per-stratum scalars (key, start/count per side, b_i, joinable) stream as
-    [S_BLOCK] slices.
-  * draws are the [S_BLOCK, b_max] tile: counter-hash PRNG (same uint32 math
-    as core.hashing — bit-identical to the oracle), modulo into the segment,
-    gather, f, masked reduce along draws.
+    the wrapper asserts the <= ~8 MiB budget over ALL slots (stacked
+    layout, covering Pallas' cross-slot double buffering) and production
+    shards relations below it.
+  * per-stratum scalars (key, start/count per side, b_i, joinable) stream
+    as [1, S_BLOCK] slices.
+  * per-slot seeds are runtime array operands (one-element VMEM blocks):
+    one compiled executable serves every seed of a mixed-seed batch.
+  * draws are the [S_BLOCK, b_max] tile: counter-hash PRNG (same uint32
+    math as core.hashing — bit-identical to the oracle), modulo into the
+    segment, gather, f, masked reduce along draws.
 
 Two-way joins only (the paper's hot case); n-way falls back to the jnp path.
 """
@@ -38,24 +45,64 @@ S_BLOCK = 128
 VMEM_VALUES_LIMIT = 8 * 1024 * 1024
 
 
-def _kernel(v1_ref, v2_ref, keys_ref, s1_ref, c1_ref, s2_ref, c2_ref,
-            join_ref, bi_ref, n_ref, sf_ref, sf2_ref,
-            *, b_max: int, seed: int, expr: str):
-    keys = keys_ref[...][:, None]                      # [Sb, 1]
+def _kernel(seed_ref, v1_ref, v2_ref, keys_ref, s1_ref, c1_ref, s2_ref,
+            c2_ref, join_ref, bi_ref, n_ref, sf_ref, sf2_ref,
+            *, b_max: int, expr: str):
+    seed = seed_ref[0]                  # this slot's seed (runtime operand)
+    keys = keys_ref[...][0][:, None]                   # [Sb, 1]
     t = jnp.arange(b_max, dtype=jnp.uint32)[None, :]   # [1, b_max]
     h1 = counter_hash(seed, keys, t, 0)
     h2 = counter_hash(seed, keys, t, 1)
-    i1 = s1_ref[...][:, None] + bounded(h1, jnp.maximum(c1_ref[...], 1)[:, None])
-    i2 = s2_ref[...][:, None] + bounded(h2, jnp.maximum(c2_ref[...], 1)[:, None])
-    v1 = v1_ref[...][i1]                               # [Sb, b_max] VMEM gather
-    v2 = v2_ref[...][i2]
+    c1 = jnp.maximum(c1_ref[...][0], 1)[:, None]
+    c2 = jnp.maximum(c2_ref[...][0], 1)[:, None]
+    i1 = s1_ref[...][0][:, None] + bounded(h1, c1)
+    i2 = s2_ref[...][0][:, None] + bounded(h2, c2)
+    v1 = v1_ref[...][0][i1]                            # [Sb, b_max] gather
+    v2 = v2_ref[...][0][i2]
     fv = v1 * v2 if expr == "product" else v1 + v2
     tf = jnp.arange(b_max, dtype=jnp.float32)[None, :]
-    mask = (tf < bi_ref[...][:, None]) & join_ref[...][:, None]
+    mask = (tf < bi_ref[...][0][:, None]) & join_ref[...][0][:, None]
     fm = jnp.where(mask, fv, 0.0)
-    n_ref[...] = jnp.sum(mask, axis=1, dtype=jnp.float32)
-    sf_ref[...] = jnp.sum(fm, axis=1)
-    sf2_ref[...] = jnp.sum(fm * fm, axis=1)
+    n_ref[...] = jnp.sum(mask, axis=1, dtype=jnp.float32)[None]
+    sf_ref[...] = jnp.sum(fm, axis=1)[None]
+    sf2_ref[...] = jnp.sum(fm * fm, axis=1)[None]
+
+
+def edge_sample_batched(values1: jnp.ndarray, values2: jnp.ndarray,
+                        keys: jnp.ndarray,
+                        start1: jnp.ndarray, count1: jnp.ndarray,
+                        start2: jnp.ndarray, count2: jnp.ndarray,
+                        joinable: jnp.ndarray, b_i: jnp.ndarray,
+                        seeds: jnp.ndarray, b_max: int, expr: str = "sum",
+                        interpret: bool = True):
+    """Per-slot per-stratum (n_sampled, sum_f, sum_f2), each float32 [B, S].
+
+    Values are ``[B, n_side]``; per-stratum operands ``[B, S]`` with
+    ``S % S_BLOCK == 0`` (wrapper pads); ``seeds`` uint32 ``[B]``.
+    """
+    B, S = keys.shape
+    assert S % S_BLOCK == 0, f"pad strata to a multiple of {S_BLOCK}"
+    assert seeds.shape == (B,), (seeds.shape, B)
+    for v in (values1, values2):
+        assert v.shape[0] == B, (v.shape, B)
+        assert v.shape[0] * v.shape[1] * 4 <= VMEM_VALUES_LIMIT, \
+            "stacked values too large for VMEM residency: " \
+            f"{v.shape[0] * v.shape[1] * 4} bytes"
+    n1, n2 = values1.shape[1], values2.shape[1]
+    col = pl.BlockSpec((1, S_BLOCK), lambda b, i: (b, i))
+    out = jax.ShapeDtypeStruct((B, S), jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_kernel, b_max=b_max, expr=expr),
+        grid=(B, S // S_BLOCK),
+        in_specs=[pl.BlockSpec((1,), lambda b, i: (b,)),
+                  pl.BlockSpec((1, n1), lambda b, i: (b, 0)),  # pinned/slot
+                  pl.BlockSpec((1, n2), lambda b, i: (b, 0)),
+                  col, col, col, col, col, col, col],
+        out_specs=[col, col, col],
+        out_shape=[out, out, out],
+        interpret=interpret,
+    )(seeds, values1, values2, keys, start1, count1, start2, count2,
+      joinable, b_i)
 
 
 def edge_sample(values1: jnp.ndarray, values2: jnp.ndarray,
@@ -63,27 +110,15 @@ def edge_sample(values1: jnp.ndarray, values2: jnp.ndarray,
                 start1: jnp.ndarray, count1: jnp.ndarray,
                 start2: jnp.ndarray, count2: jnp.ndarray,
                 joinable: jnp.ndarray, b_i: jnp.ndarray,
-                b_max: int, seed: int = 0, expr: str = "sum",
+                b_max: int, seed=0, expr: str = "sum",
                 interpret: bool = True):
     """Per-stratum (n_sampled, sum_f, sum_f2), each float32 [S].
 
-    S must be a multiple of S_BLOCK (wrapper pads); values arrays are whole.
+    Single-slot convenience over :func:`edge_sample_batched` (B = 1).
     """
-    S = keys.shape[0]
-    assert S % S_BLOCK == 0, f"pad strata to a multiple of {S_BLOCK}"
-    for v in (values1, values2):
-        assert v.shape[0] * 4 <= VMEM_VALUES_LIMIT, \
-            f"values too large for VMEM residency: {v.shape[0] * 4} bytes"
-    n1, n2 = values1.shape[0], values2.shape[0]
-    col = pl.BlockSpec((S_BLOCK,), lambda i: (i,))
-    out = jax.ShapeDtypeStruct((S,), jnp.float32)
-    return pl.pallas_call(
-        functools.partial(_kernel, b_max=b_max, seed=seed, expr=expr),
-        grid=(S // S_BLOCK,),
-        in_specs=[pl.BlockSpec((n1,), lambda i: (0,)),   # pinned values
-                  pl.BlockSpec((n2,), lambda i: (0,)),
-                  col, col, col, col, col, col, col],
-        out_specs=[col, col, col],
-        out_shape=[out, out, out],
-        interpret=interpret,
-    )(values1, values2, keys, start1, count1, start2, count2, joinable, b_i)
+    seeds = jnp.asarray(seed, jnp.uint32).reshape(1)
+    n, sf, sf2 = edge_sample_batched(
+        values1[None], values2[None], keys[None], start1[None], count1[None],
+        start2[None], count2[None], joinable[None], b_i[None], seeds,
+        b_max, expr, interpret=interpret)
+    return n[0], sf[0], sf2[0]

@@ -69,11 +69,21 @@ and surfaced as p50/p95/max in ``ServerDiagnostics.snapshot()`` — the
 distribution the admission policy consults (and the one ``serve_bench``
 records).
 
-``use_kernels`` queries are served through the Pallas path per-query
-(Pallas calls are not batched under vmap here, and the kernels are
-single-device — a mesh server still serves them, on the default device);
-they still share the sigma registry and are tracked in the executable
-cache.
+``use_kernels`` queries are FIRST-CLASS batched citizens: kernel shape
+classes flow through the same ``_batch_inputs``/``_run_batch`` machinery
+and executable cache as the jnp classes, with kernel-backed stage
+executables (``core.join.prepare_stage_kernels_batched`` /
+``sample_stage_kernels_batched``) whose Pallas grids carry the slot
+dimension themselves — a 2-D ``(batch_slot, key_block)`` sweep over the
+stacked ``[B, num_blocks, 8]`` filter layout instead of a per-query loop.
+Seeds (and the decoupled ``filter_seed``) are runtime array operands, so a
+mixed-seed batch is one executable and N distinct seeds cost zero
+recompiles; prebuilt/cached filter words (dataset cache, streaming window
+OR-merges) feed the stacked probe directly.  The kernels are single-device:
+a mesh server still serves them on the default device, gathering sharded
+rows back to the host first — that round-trip is metered as
+``ServerDiagnostics.kernel_gather_bytes`` (zero at mesh 1, where rows
+already sit on the one device).
 
 The streaming subsystem (``runtime/stream_join.py``) layers windowed
 sessions on this engine: ``JoinRequest.filter_seed`` decouples the filter
@@ -104,8 +114,9 @@ from repro.core.distributed import (make_serve_exact, make_serve_exact_psum,
                                     planned_bucket_cap)
 from repro.core.estimators import SumParts
 from repro.core.join import (EXPRS, TUPLE_BYTES, JoinDiagnostics, JoinResult,
-                             approx_join, decide_sample_sizes, exact_stage,
-                             measured_sigma, prepare_stage_pre, sample_stage)
+                             decide_sample_sizes, exact_stage, measured_sigma,
+                             prepare_stage_kernels_batched, prepare_stage_pre,
+                             sample_stage, sample_stage_kernels_batched)
 from repro.core.relation import (Relation, bucket_capacity, bucket_to_pow2,
                                  fingerprint, shard_to_mesh)
 
@@ -233,6 +244,10 @@ class ServerDiagnostics:
     filter_builds: int = 0          # Bloom word builds (cache misses)
     filter_cache_hits: int = 0      # Bloom word reuses
     shuffled_bytes_saved: float = 0.0
+    # host gather bytes for kernel-path queries on a mesh server (the
+    # single-device kernels pull sharded rows back to the default device;
+    # zero at mesh 1 and on meshless servers — asserted in tests)
+    kernel_gather_bytes: float = 0.0
     # distributed-mode meters (mesh servers only)
     dist_shuffled_tuple_bytes: float = 0.0   # measured live bytes moved
     per_device_shuffled_bytes: Optional[np.ndarray] = None  # f64 [k]
@@ -299,6 +314,34 @@ def _make_exact(agg: str, expr: str):
 def _make_filter_build(num_blocks: int):
     def fn(keys, valid, seed):
         return bloom.build(keys, valid, num_blocks, seed).words
+    return jax.jit(fn)
+
+
+# -- kernel-backed stage builders (Pallas grids own the slot dimension, so
+# -- these take the engine's slot-stacked batch directly instead of vmap) ---
+
+def _make_prepare_kernels(max_strata: int, interpret: bool):
+    def fn(rels, words, seeds):
+        return prepare_stage_kernels_batched(rels, words, max_strata, seeds,
+                                             interpret=interpret)
+    return jax.jit(fn)
+
+
+def _make_sample_kernels(b_max: int, agg: str, confidence: float, expr: str,
+                         interpret: bool):
+    def fn(sorted_rels, strata, b_i, seeds):
+        return sample_stage_kernels_batched(
+            sorted_rels, strata, b_i, b_max, seeds, agg=agg,
+            confidence=confidence, expr=expr, interpret=interpret)
+    return jax.jit(fn)
+
+
+def _make_filter_build_kernels(num_blocks: int, interpret: bool):
+    from repro.kernels import ops as kops
+
+    def fn(keys, valid, seed):
+        return kops.build_filter(keys, valid, num_blocks, seed,
+                                 interpret=interpret).words
     return jax.jit(fn)
 
 
@@ -440,12 +483,6 @@ class JoinServer:
         mode = req.serve_mode or self.serve_mode
         if mode not in SERVE_MODES:
             raise ValueError(f"unknown serve_mode {mode!r}")
-        if req.use_kernels and (req.filter_seed is not None
-                                or req._words is not None):
-            # the Pallas route runs approx_join end to end: it builds its own
-            # filters from req.seed and cannot take prebuilt words
-            raise ValueError("use_kernels is incompatible with filter_seed / "
-                             "prebuilt filter words")
         if self.mesh is None or req.use_kernels:
             # psum vs exact-parity only distinguishes mesh merge strategies;
             # off-mesh (and on the single-device kernel route) there is one
@@ -501,12 +538,16 @@ class JoinServer:
         return fn, fresh
 
     def _words_for(self, rel: Relation, fp: Optional[str], num_blocks: int,
-                   seed: int) -> jnp.ndarray:
+                   seed: int, use_kernels: bool = False) -> jnp.ndarray:
         """Per-relation dataset-filter words, built once per (fp, nb, seed).
 
         ``fp=None`` (inline relations) always builds — no cache entry.  On a
         mesh the build runs sharded (local build + OR-reduce) and the cached
         words are replicated — bit-identical to a single-device build.
+        ``use_kernels`` routes a meshless build through the Pallas hash
+        kernel; the words are bit-identical either way (asserted in
+        ``tests/test_kernels.py``), so kernel and jnp queries share one
+        word cache without divergence.
         """
         key = (fp, num_blocks, seed)
         if fp is not None:
@@ -521,6 +562,12 @@ class JoinServer:
                 "fbuild", (rel.capacity, num_blocks, self.mesh_shape), None,
                 partial(make_serve_filter_build, self.mesh, self.join_axes,
                         num_blocks=num_blocks))
+        elif use_kernels:
+            from repro.kernels import ops as kops
+            build, _ = self._executable(
+                "fbuild_k", (rel.capacity, num_blocks), None,
+                partial(_make_filter_build_kernels, num_blocks,
+                        kops.use_interpret()))
         else:
             build, _ = self._executable(
                 "fbuild", (rel.capacity, num_blocks), None,
@@ -543,6 +590,29 @@ class JoinServer:
         if req.budget.latency_s is None:
             return float("inf")
         return req._submit_t + req.budget.latency_s
+
+    def _slot_cap(self, cls: ShapeClass) -> int:
+        """Batch width cap for one step of this shape class.
+
+        Kernel classes stack per-slot filters and value arrays in VMEM, so
+        the per-slot working set divides the kernel budget: a class whose
+        single-query footprint was fine under the old per-query loop must
+        still serve — in narrower batches — rather than trip the wrappers'
+        stacked-layout asserts.  Floored to a power of two (batches pad to
+        their pow2 bucket, and pad slots occupy real VMEM slots too); at
+        1 the capacity is exactly the retired per-query path's.
+        """
+        if not cls.use_kernels:
+            return self.batch_slots
+        from repro.kernels import bloom_probe, edge_sample
+        filter_bytes = bloom.num_blocks_for(max(cls.caps), cls.fp_rate) \
+            * bloom.WORDS_PER_BLOCK * 4
+        values_bytes = max(cls.caps) * 4
+        cap = min(bloom_probe.VMEM_FILTER_LIMIT // filter_bytes,
+                  edge_sample.VMEM_VALUES_LIMIT // values_bytes,
+                  self.batch_slots)
+        cap = max(cap, 1)
+        return 1 << (cap.bit_length() - 1)          # floor to pow2
 
     def _take_batch(self) -> tuple:
         """Pick the next step's shape class and batch.
@@ -568,8 +638,9 @@ class JoinServer:
         if backlog:
             candidates.sort(key=self._deadline)   # stable: FIFO on ties
         batch, seen_ids = [], set()
+        slots = self._slot_cap(cls)
         for r in candidates:
-            if len(batch) == self.batch_slots:
+            if len(batch) == slots:
                 break
             if (self.sigma_pipeline and r.budget.error is not None
                     and r.query_id in seen_ids):
@@ -589,11 +660,7 @@ class JoinServer:
         self.diagnostics.steps += 1
         self.diagnostics.max_batch = max(self.diagnostics.max_batch,
                                          len(batch))
-        if cls.use_kernels:
-            for req in batch:
-                self._run_kernel(cls, req)
-        else:
-            self._run_batch(cls, batch)
+        self._run_batch(cls, batch)
         for req in batch:
             req.done = True
             req.queue_latency_s = time.perf_counter() - req._submit_t
@@ -615,36 +682,44 @@ class JoinServer:
 
     # -- execution paths ----------------------------------------------------
 
-    def _run_kernel(self, cls: ShapeClass, req: JoinRequest) -> None:
-        # Pallas route: per-query execution through approx_join.  The kernel
-        # wrappers are jitted with STATIC seeds, so XLA compiles per distinct
-        # seed — keying the cache entry on the seed keeps the compile/hit
-        # counters honest about that.
-        self._executable("kernel", cls, req.seed, lambda: approx_join)
-        rels = req.rels
-        if self.mesh is not None:
-            # the Pallas kernels are single-device: gather mesh-sharded rows
-            # back to the default device for this query
-            rels = [Relation(*(jnp.asarray(np.asarray(jax.device_get(x)))
-                               for x in r)) for r in rels]
-        req.result = approx_join(
-            rels, req.budget, agg=req.agg, expr=req.expr, seed=req.seed,
-            fp_rate=req.fp_rate, max_strata=cls.max_strata, b_max=cls.b_max,
-            cost_model=self.cost_model, sigma_registry=self.sigma,
-            query_id=req.query_id, dedup=req.dedup, use_kernels=True)
-        self.diagnostics.kernel_queries += 1
-        if req.result.diagnostics.sampled:
-            self.diagnostics.sampled_queries += 1
-        else:
-            self.diagnostics.exact_queries += 1
+    def _kernel_gather(self, arrays) -> list:
+        """Round-trip device arrays to the host for the kernel path (the
+        Pallas kernels are single-device; a mesh server's rows/words are
+        sharded or replicated across the mesh).  Metered: the batched
+        kernel path must keep this at ZERO on meshless servers and mesh 1."""
+        host = [np.asarray(jax.device_get(x)) for x in arrays]
+        self.diagnostics.kernel_gather_bytes += float(
+            sum(h.nbytes for h in host))
+        return [jnp.asarray(h) for h in host]
 
     def _batch_inputs(self, cls: ShapeClass, batch: list[JoinRequest]):
         """Pad to the pow2 batch bucket; stack relations, words and seeds."""
         B = bucket_capacity(len(batch))
         reqs = batch + [batch[-1]] * (B - len(batch))  # pad slots (discarded)
-        rels_b = [Relation(jnp.stack([r.rels[s].keys for r in reqs]),
-                           jnp.stack([r.rels[s].values for r in reqs]),
-                           jnp.stack([r.rels[s].valid for r in reqs]))
+        # kernel classes on a multi-device mesh serve on the default device:
+        # sharded rows gather back to the host, once per DISTINCT array this
+        # step (dataset-handle requests share Relation objects — B slots of
+        # one dataset move its rows once, and kernel_gather_bytes counts
+        # actual transfers), counted in kernel_gather_bytes
+        gather = (cls.use_kernels and self.mesh is not None
+                  and self.mesh_k > 1)
+        memo: dict = {}
+
+        def host(x):
+            hit = memo.get(id(x))
+            if hit is None:
+                # the memo entry pins x so its id cannot be recycled mid-step
+                hit = (x, self._kernel_gather([x])[0])
+                memo[id(x)] = hit
+            return hit[1]
+
+        def rels_of(r):
+            if not gather:
+                return r.rels
+            return [Relation(*(host(x) for x in rel)) for rel in r.rels]
+        rels_b = [Relation(jnp.stack([rels_of(r)[s].keys for r in reqs]),
+                           jnp.stack([rels_of(r)[s].values for r in reqs]),
+                           jnp.stack([rels_of(r)[s].valid for r in reqs]))
                   for s in range(cls.n_inputs)]
         seeds = jnp.asarray([r.seed for r in reqs], jnp.uint32)
         fseeds = jnp.asarray([r.seed if r.filter_seed is None
@@ -657,12 +732,17 @@ class JoinServer:
         for r in batch:
             if r._words is not None:
                 assert len(r._words) == cls.n_inputs, r
-                per_req.append(jnp.stack(list(r._words)))
+                ws = list(r._words)
             else:
                 fs = r.seed if r.filter_seed is None else r.filter_seed
-                per_req.append(jnp.stack(
-                    [self._words_for(r.rels[s], r._fps[s], num_blocks, fs)
-                     for s in range(cls.n_inputs)]))
+                ws = [self._words_for(r.rels[s], r._fps[s], num_blocks, fs,
+                                      use_kernels=cls.use_kernels)
+                      for s in range(cls.n_inputs)]
+            if gather:  # replicated mesh words -> default device, metered
+                # per side, pre-stack: cached word arrays are shared across
+                # slots of one dataset, so each moves at most once per step
+                ws = [host(x) for x in ws]
+            per_req.append(jnp.stack(ws))
         words_b = jnp.stack(per_req + [per_req[-1]] * (B - len(batch)))
         return B, rels_b, words_b, seeds, fseeds, num_blocks
 
@@ -743,10 +823,31 @@ class JoinServer:
     def _stage_builders(self, cls: ShapeClass, num_blocks: int):
         """Per-backend stage builders + dispatch-argument adapters.
 
-        The single-device and mesh paths share every other line of the step
-        (warmup, timing, host decisions, result assembly); only the compiled
-        stage programs and two extra sample/exact arguments differ.
+        The single-device, kernel and mesh paths share every other line of
+        the step (warmup, timing, host decisions, result assembly); only the
+        compiled stage programs and two extra sample/exact arguments differ.
         """
+        if cls.use_kernels:
+            from repro.kernels import ops as kops
+            interp = kops.use_interpret()
+            # the fused Pallas sampler is two-way/non-dedup (the paper's hot
+            # case); other kernel classes keep the kernel-backed prepare and
+            # fall back to the vmapped jnp sampler — exactly approx_join's
+            # own use_kernels composition, so bit-parity holds either way
+            if cls.n_inputs == 2 and not cls.dedup:
+                sample = partial(_make_sample_kernels, cls.b_max, cls.agg,
+                                 cls.confidence, cls.expr, interp)
+            else:
+                sample = partial(_make_sample, cls.b_max, cls.agg, cls.dedup,
+                                 cls.confidence, cls.expr)
+            return dict(
+                prepare=partial(_make_prepare_kernels, cls.max_strata,
+                                interp),
+                sample=sample,
+                exact=partial(_make_exact, cls.agg, cls.expr),
+                sample_args=lambda prep, b, s: (prep.sorted_rels, prep.strata,
+                                                b, s),
+                exact_args=lambda prep: (prep.sorted_rels, prep.strata))
         if self.mesh is None:
             return dict(
                 prepare=partial(_make_prepare, cls.max_strata),
@@ -853,7 +954,12 @@ class JoinServer:
             exact, _ = self._executable("exact", cls, B, builders["exact"])
             e_est, e_cnt = exact(*builders["exact_args"](prep))
 
-        dropped = None if self.mesh is None else np.asarray(
+        # kernel classes run the single-device pipeline even on a mesh
+        # server (plain PrepareOut: no shuffle buckets, nothing dropped)
+        meshless = self.mesh is None or cls.use_kernels
+        if cls.use_kernels:
+            self.diagnostics.kernel_queries += len(batch)
+        dropped = None if meshless else np.asarray(
             jax.device_get(prep.bucket_overflow), np.float64)
         self._finish_batch(
             batch, strata_slice=slice_i, live_counts=prep.live_counts,
@@ -863,7 +969,7 @@ class JoinServer:
             err=err, cnt=cnt, dof=dof, stats=stats, skeys=skeys,
             dropped=dropped)
 
-        if self.mesh is not None:
+        if not meshless:
             # measured per-device shuffle volume (the paper's data-movement
             # reduction, observable from the server); pad slots excluded
             n_real = len(batch)

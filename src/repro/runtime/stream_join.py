@@ -42,6 +42,13 @@ What is incremental, and what licenses it:
   (``diagnostics.overlap_fraction``) feeds an EWMA that becomes the next
   window's ``overlap_hint`` — the registration-time planning trick,
   restated for a moving distribution.
+* **Kernels.**  ``use_kernels=True`` sessions serve their windows through
+  the engine's batched Pallas path: sub-window filter words build once
+  through the kernel hash (bit-identical to the jnp build, so the word
+  cache is shared), the window's OR-merge feeds the stacked
+  ``[B, num_blocks, 8]`` filter probe directly, and the decoupled
+  filter/sampling seeds are runtime kernel operands — the session's single
+  shape class stays zero-recompile at steady state, now at kernel speed.
 * **Sketch.**  A merge-able per-stratum reservoir
   (:class:`~repro.core.sampling.Reservoir`) folds every micro-batch's
   values in bounded memory — stream-level per-stratum value moments for
@@ -146,6 +153,7 @@ class StreamJoinSession:
                  max_strata: Optional[int] = None,
                  b_max: Optional[int] = DEFAULT_B_MAX,
                  serve_mode: Optional[str] = None,
+                 use_kernels: bool = False,
                  sketch_strata: int = 64, sketch_cap: int = 64,
                  overlap_alpha: float = 0.5):
         self.server = server
@@ -154,6 +162,13 @@ class StreamJoinSession:
         self.n_sides = n_sides
         self.budget = budget
         self.agg, self.expr, self.dedup = agg, expr, dedup
+        # kernel mode: windows serve through the engine's batched Pallas
+        # path — sub-window words still build once through the filter cache
+        # (via the kernel hash — bit-identical words, shared entries) and
+        # the window's OR-merge feeds the stacked-filter probe directly;
+        # the decoupled filter_seed/sampling seeds are runtime operands, so
+        # steady-state streaming stays zero-recompile in kernel mode too
+        self.use_kernels = use_kernels
         self.seed = seed
         self.filter_seed = seed
         self.fp_rate = fp_rate
@@ -257,7 +272,8 @@ class StreamJoinSession:
         words = []
         for side in range(self.n_sides):
             sub_words = [srv._words_for(s.rels[side], s.fps[side],
-                                        self.num_blocks, self.filter_seed)
+                                        self.num_blocks, self.filter_seed,
+                                        use_kernels=self.use_kernels)
                          for s in subs]
             if len(sub_words) == 1:
                 words.append(sub_words[0])
@@ -287,8 +303,8 @@ class StreamJoinSession:
             query_id=self.query_id, seed=self.seed + 1 + w,
             filter_seed=self.filter_seed, fp_rate=self.fp_rate,
             max_strata=self.max_strata, b_max=self.b_max, dedup=self.dedup,
-            serve_mode=self.serve_mode, overlap_hint=self.overlap_ewma,
-            stream=self.name, window_id=w)
+            use_kernels=self.use_kernels, serve_mode=self.serve_mode,
+            overlap_hint=self.overlap_ewma, stream=self.name, window_id=w)
         req._words = self._window_words(subs)
         self.server._submit_window(self, req)
         self.pending.append(req)

@@ -40,7 +40,7 @@ def approx_join_backend(rels, seed):
             res.stats)
 
 
-def make_server_backend(server: JoinServer):
+def make_server_backend(server: JoinServer, use_kernels: bool = False):
     """One registered dataset + one pilot-round query per replication."""
     def backend(rels, seed):
         name = f"rep{seed}"
@@ -49,7 +49,7 @@ def make_server_backend(server: JoinServer):
             dataset=name,
             budget=QueryBudget(error=0.5, pilot_fraction=CFG.pilot_fraction),
             query_id=name, seed=seed, max_strata=CFG.max_strata,
-            b_max=CFG.b_max))
+            b_max=CFG.b_max, use_kernels=use_kernels))
         server.run()
         return (float(q.result.estimate), float(q.result.error_bound),
                 float(q.result.count), q.result.stats)
@@ -77,6 +77,33 @@ def test_accuracy_gate_server_mesh1(serve_mode):
     assert rep.passed, rep.summary()
     assert rep.checked_allocation
     assert srv.diagnostics.dist_dropped_tuples == 0.0
+
+
+def test_accuracy_gate_approx_join_kernels():
+    """Kernel-path row: the fused Pallas operator (interpret mode) passes
+    the same statistical contract as the jnp driver."""
+    def backend(rels, seed):
+        res = approx_join(
+            rels, QueryBudget(error=0.5, pilot_fraction=CFG.pilot_fraction),
+            max_strata=CFG.max_strata, b_max=CFG.b_max, seed=seed,
+            use_kernels=True)
+        return (float(res.estimate), float(res.error_bound),
+                float(res.count), res.stats)
+    rep = run_accuracy_gate(backend, CFG)
+    assert rep.passed, rep.summary()
+    assert rep.checked_allocation
+
+
+def test_accuracy_gate_server_kernels_mesh1():
+    """Kernel-path row, served: the batched Pallas engine path at mesh 1
+    passes the gate with zero host-gather bytes (the post-refactor batched
+    path never round-trips rows on a 1-device mesh)."""
+    srv = mesh_server(1, "exact-parity")
+    rep = run_accuracy_gate(make_server_backend(srv, use_kernels=True), CFG)
+    assert rep.passed, rep.summary()
+    assert rep.checked_allocation
+    assert srv.diagnostics.kernel_queries == CFG.replications
+    assert srv.diagnostics.kernel_gather_bytes == 0.0
 
 
 def test_gate_rejects_biased_backend():

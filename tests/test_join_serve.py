@@ -261,10 +261,136 @@ def test_queue_latency_percentiles(rng):
         pytest.approx(max(q.queue_latency_s for q in qs))
 
 
-def test_kernel_route_served_per_query(rng):
+def test_kernel_batch_mixed_seeds_bit_identical_to_per_query(rng):
+    """The acceptance contract: ONE engine step serves a mixed-seed kernel
+    batch through the stacked Pallas grids, and every slot is bit-identical
+    to its own per-query approx_join(use_kernels=True) call."""
+    r1, r2 = make_pair(rng, n=1 << 11)
+    srv = JoinServer(batch_slots=4)
+    seeds = [3, 11, 3, 250]
+    qs = [srv.submit(JoinRequest(rels=[r1, r2], budget=QueryBudget(error=0.5),
+                                 query_id=f"t{i}", seed=s, max_strata=512,
+                                 b_max=256, use_kernels=True))
+          for i, s in enumerate(seeds)]
+    assert srv.step() == 4                    # one fused dispatch, no loop
+    for i, s in enumerate(seeds):
+        direct = approx_join([r1, r2], QueryBudget(error=0.5), max_strata=512,
+                             b_max=256, seed=s, use_kernels=True)
+        assert _identical(qs[i].result, direct), (i, s)
+        assert bool(qs[i].result.diagnostics.sampled)
+    assert srv.diagnostics.kernel_queries == 4
+    assert srv.diagnostics.max_batch == 4
+    # meshless: the batched kernel path never round-trips rows to the host
+    assert srv.diagnostics.kernel_gather_bytes == 0.0
+
+
+def test_kernel_seed_sweep_no_recompiles_no_rebuilds(rng):
+    """The static-seed recompile bug, fixed at the engine: a 16-seed warm
+    sweep over one kernel shape class (mixed batch fills too) must keep the
+    compile AND filter-build counters flat — seeds are runtime operands and
+    the dataset words cache ignores the sampling seed entirely."""
+    r1, r2 = make_pair(rng, n=1 << 11)
+    srv = JoinServer(batch_slots=4)
+    srv.register_dataset("ds", [r1, r2])
+
+    def submit(q, seed):
+        return srv.submit(JoinRequest(
+            dataset="ds", budget=QueryBudget(error=0.5), query_id=f"t{q}",
+            seed=seed, filter_seed=7, max_strata=512, b_max=256,
+            use_kernels=True))
+
+    # warmup: cover the batch fills the sweep uses (4-wide and 2-wide)
+    for q in range(4):
+        submit(q, seed=1000 + q)
+    srv.run()
+    for q in range(2):
+        submit(q, seed=2000 + q)
+    srv.run()
+    warm = srv.diagnostics.snapshot()
+    assert warm["filter_builds"] == 2          # one per relation, ever
+
+    qs = []
+    for seed in range(16):                     # 4 full batches + 2-fills
+        qs.append(submit(seed % 4, seed))
+        if seed % 4 == 3:
+            srv.run()
+    for seed in range(16, 20, 2):
+        submit(0, seed), submit(1, seed + 1)
+        srv.run()
+    after = srv.diagnostics.snapshot()
+    assert after["compiles"] == warm["compiles"], "seed sweep recompiled"
+    assert after["filter_builds"] == warm["filter_builds"], \
+        "seed sweep rebuilt filter words"
+    assert all(q.done for q in qs)
+
+
+def test_kernel_batch_width_capped_by_vmem_budget(rng, monkeypatch):
+    """A kernel class whose per-slot VMEM working set only fits a few
+    stacked slots must serve in narrower batches (width 1 == exactly the
+    retired per-query path's capacity) instead of tripping the wrappers'
+    B * filter_bytes asserts — and each narrowed batch stays bit-identical
+    to per-query approx_join."""
+    from repro.core import bloom
+    from repro.kernels import bloom_probe
+    r1, r2 = make_pair(rng, n=1 << 11)
+    # shrink the budget so this class's stacked filters fit only 2 slots
+    fb = bloom.num_blocks_for(1 << 11, 0.01) * bloom.WORDS_PER_BLOCK * 4
+    monkeypatch.setattr(bloom_probe, "VMEM_FILTER_LIMIT", 2 * fb)
+    srv = JoinServer(batch_slots=4)
+    qs = [srv.submit(JoinRequest(rels=[r1, r2], budget=QueryBudget(error=0.5),
+                                 query_id=f"t{i}", seed=10 + i,
+                                 max_strata=512, b_max=256,
+                                 use_kernels=True))
+          for i in range(4)]
+    srv.run()
+    assert srv.diagnostics.max_batch == 2        # capped below batch_slots
+    assert srv.diagnostics.steps == 2
+    for i, q in enumerate(qs):
+        direct = approx_join([r1, r2], QueryBudget(error=0.5), max_strata=512,
+                             b_max=256, seed=10 + i, use_kernels=True)
+        assert _identical(q.result, direct), i
+
+
+def test_kernel_route_accepts_filter_seed_and_prebuilt_words(rng):
+    """filter_seed decoupling (and prebuilt words) now work on the kernel
+    path — the refactor lifted the old ValueError — and stay bit-identical
+    to the jnp path under the same (filter_seed, seed) split."""
+    from repro.core import bloom
     r1, r2 = make_pair(rng, n=1 << 11)
     srv = JoinServer(batch_slots=2)
-    q = srv.submit(JoinRequest(rels=[r1, r2], budget=QueryBudget(error=0.5),
+
+    def submit(use_kernels, **kw):
+        return srv.submit(JoinRequest(
+            rels=[r1, r2], budget=QueryBudget(error=0.5), seed=3,
+            max_strata=512, b_max=256, use_kernels=use_kernels, **kw))
+
+    a = submit(True, query_id="k", filter_seed=9)
+    b = submit(False, query_id="j", filter_seed=9)
+    srv.run()
+    assert _identical(a.result, b.result)
+
+    nb = bloom.num_blocks_for(1 << 11, 0.01)
+    words = [bloom.build(r.keys, r.valid, nb, 9).words for r in (r1, r2)]
+    c = submit(True, query_id="kw")
+    c.filter_seed = 9
+    c._words = words
+    d = submit(True, query_id="kw2", filter_seed=9)
+    srv.run()
+    assert _identical(c.result, d.result)      # prebuilt == cache-built
+
+
+def test_kernel_route_on_mesh1_no_host_gather(rng):
+    """A 1-device mesh server serves kernel queries without any host
+    round-trip (the rows already sit on the one device) — the satellite
+    meter must read zero, and results match the meshless kernel server."""
+    import jax
+    import numpy as np_
+    from jax.sharding import Mesh
+    r1, r2 = make_pair(rng, n=1 << 11)
+    mesh = Mesh(np_.array(jax.devices()[:1]), ("data",))
+    srv = JoinServer(batch_slots=2, mesh=mesh)
+    srv.register_dataset("ds", [r1, r2])
+    q = srv.submit(JoinRequest(dataset="ds", budget=QueryBudget(error=0.5),
                                query_id="t", seed=3, max_strata=512,
                                b_max=256, use_kernels=True))
     srv.run()
@@ -272,3 +398,4 @@ def test_kernel_route_served_per_query(rng):
                          b_max=256, seed=3, use_kernels=True)
     assert _identical(q.result, direct)
     assert srv.diagnostics.kernel_queries == 1
+    assert srv.diagnostics.kernel_gather_bytes == 0.0

@@ -121,6 +121,45 @@ assert after["cache_hits"] > warm["cache_hits"]
 assert after["filter_builds"] == warm["filter_builds"]
 assert after["filter_cache_hits"] > warm["filter_cache_hits"]
 print("CACHE-OK")
+
+# --- kernel route on mesh servers: the single-device Pallas path gathers
+# --- sharded rows to the host (metered, zero at mesh 1), results identical
+from repro.core.join import approx_join
+
+kref = approx_join([r1, r2], QueryBudget(error=0.5), max_strata=MS,
+                   b_max=BM, seed=21, use_kernels=True)
+for d in (1, 2, 8):
+    mesh = Mesh(np.array(jax.devices()[:d]), ("data",))
+    srv = JoinServer(batch_slots=2, mesh=mesh)
+    srv.register_dataset("ds", [r1, r2])
+    q = srv.submit(JoinRequest(dataset="ds", budget=QueryBudget(error=0.5),
+                               query_id="k0", seed=21, max_strata=MS,
+                               b_max=BM, use_kernels=True))
+    srv.run()
+    assert surface(q) == (float(kref.estimate), float(kref.error_bound),
+                          float(kref.count), float(kref.dof)), d
+    assert srv.diagnostics.kernel_queries == 1, d
+    if d == 1:
+        assert srv.diagnostics.kernel_gather_bytes == 0.0, d
+    else:
+        assert srv.diagnostics.kernel_gather_bytes > 0, d
+    if d == 2:
+        bytes_one = srv.diagnostics.kernel_gather_bytes
+
+# gathers are memoized per distinct array within a step: a 2-slot batch of
+# the SAME dataset (shared rows + shared filter words) moves exactly the
+# bytes one query does
+srv = JoinServer(batch_slots=2,
+                 mesh=Mesh(np.array(jax.devices()[:2]), ("data",)))
+srv.register_dataset("ds", [r1, r2])
+for i in (0, 1):
+    srv.submit(JoinRequest(dataset="ds", budget=QueryBudget(error=0.5),
+                           query_id=f"k{i}", seed=21 + i, filter_seed=21,
+                           max_strata=MS, b_max=BM, use_kernels=True))
+assert srv.step() == 2
+assert srv.diagnostics.kernel_gather_bytes == bytes_one, \
+    (srv.diagnostics.kernel_gather_bytes, bytes_one)
+print("KERNEL-MESH-OK")
 """
 
 
@@ -132,7 +171,8 @@ def test_distributed_server_parity_1_2_4_8():
                          cwd=os.path.dirname(os.path.dirname(
                              os.path.abspath(__file__))))
     assert out.returncode == 0, out.stderr[-3000:]
-    for marker in ("DIRECT-PARITY-OK", "SERVER-PARITY-OK", "CACHE-OK"):
+    for marker in ("DIRECT-PARITY-OK", "SERVER-PARITY-OK", "CACHE-OK",
+                   "KERNEL-MESH-OK"):
         assert marker in out.stdout, (marker, out.stdout[-2000:])
 
 

@@ -340,6 +340,60 @@ def test_stream_accuracy_gate_single_device():
     assert srv.diagnostics.cache_hits > srv.diagnostics.compiles
 
 
+def test_stream_kernel_windows_match_jnp_within_gate_tolerance():
+    """Kernel-mode streaming parity: two same-seed sessions over the SAME
+    micro-batch stream — one through the batched Pallas path, one jnp —
+    must agree per window well within the accuracy gate's tolerance (the
+    shared hash math makes them bit-identical in practice), share the
+    filter-word cache (bit-identical words), and stay zero-recompile after
+    the first window in BOTH modes."""
+    spec = WindowSpec(size=4, slide=1, sub_rows=512)
+    srv = StreamJoinServer(batch_slots=2)
+    sk = _session(srv, spec, name="kern", use_kernels=True)
+    sj = _session(srv, spec, name="jnp")
+    batches = [_mb(900 + i) for i in range(6)]
+    done_k, done_j = [], []
+    for i, mb in enumerate(batches):
+        sk.push(mb)
+        sj.push(mb)
+        srv.run()
+        if i == spec.size - 1:        # both modes fully compiled by now
+            warm = srv.diagnostics.snapshot()
+        done_k += sk.drain()
+        done_j += sj.drain()
+    assert len(done_k) == len(done_j) == 3
+    for a, b in zip(done_k, done_j):
+        assert float(a.result.estimate) == pytest.approx(
+            float(b.result.estimate), rel=1e-6), a.window_id
+        assert float(a.result.error_bound) == pytest.approx(
+            float(b.result.error_bound), rel=1e-6), a.window_id
+        assert float(a.result.count) == float(b.result.count), a.window_id
+    after = srv.diagnostics.snapshot()
+    assert after["compiles"] == warm["compiles"], "steady state recompiled"
+    # same fingerprints + same filter_seed: the kernel session's words were
+    # built once and the jnp session reused every one of them (or vice
+    # versa) — one build per (sub-window, side) across BOTH sessions
+    assert after["filter_builds"] == len(batches) * 2
+    assert srv.diagnostics.kernel_gather_bytes == 0.0
+    assert srv.diagnostics.kernel_queries == 3
+
+
+def test_stream_accuracy_gate_kernels_single_device():
+    """Acceptance: StreamJoinServer(use_kernels=True) windows pass the
+    per-window statistical gate at mesh 1, interpret mode."""
+    cfg = _stream_gate_cfg()
+    spec = WindowSpec(size=cfg.window_size, slide=cfg.window_size,
+                      sub_rows=cfg.rows_per_sub)
+    srv = StreamJoinServer(batch_slots=1)
+    rep = run_stream_accuracy_gate(
+        _gate_backend(srv, spec, cfg, use_kernels=True), cfg)
+    assert rep.passed, rep.summary()
+    assert rep.checked_allocation
+    assert srv.diagnostics.kernel_queries == cfg.windows
+    assert srv.diagnostics.kernel_gather_bytes == 0.0
+    assert srv.diagnostics.cache_hits > srv.diagnostics.compiles
+
+
 def test_stream_gate_rejects_window_leak():
     """Harness self-test: a backend that leaks the previous window's tuples
     into the estimate must fail the per-window gate."""
