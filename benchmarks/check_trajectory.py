@@ -1,0 +1,220 @@
+"""Perf-trajectory regression gate over the BENCH_*.json artifacts.
+
+CI has always uploaded ``BENCH_serve.json`` / ``BENCH_stream.json`` /
+``BENCH_kernel.json`` / ``BENCH_async.json`` — and never compared two
+runs, so the recorded perf trajectory gated nothing.  This script closes
+the loop: it compares the artifacts of the CURRENT run (cwd) against a
+baseline snapshot and fails (exit 1) when throughput drops, or tail
+latency rises, by more than the tolerance (default 20%,
+``REPRO_TRAJECTORY_TOL`` / ``--tol``).
+
+Baselines live in ``benchmarks/baselines/`` (committed; note the files are
+named ``serve.json`` etc. WITHOUT the ``BENCH_`` prefix — the artifacts
+themselves are gitignored) and are refreshed on main via ``--refresh``
+into an actions/cache directory, which takes precedence when present so
+the gate tracks the trajectory run-over-run rather than only
+vs the committed snapshot.
+
+Machine calibration: absolute q/s depends on the runner, so each baseline
+snapshot stores a CPU micro-benchmark score (``calibration.json``).  The
+gate re-measures the score and scales expectations by the speed ratio —
+a 2x-slower runner is allowed 2x-lower q/s and 2x-higher latency before
+the tolerance applies.  Rows are matched by ``(bench, mode)``; gated
+metrics are throughput (``qps``, ``tuples_per_s`` — lower is a
+regression), machine-independent speedup ratios (``x``, ``p95_ratio``),
+and tail latency (``*_p95_s``, ``window_ms_p95`` — higher is a
+regression, with a small absolute floor so microsecond jitter on
+near-zero latencies cannot fail the gate).
+
+Usage:
+  python -m benchmarks.check_trajectory              # gate cwd artifacts
+  python -m benchmarks.check_trajectory --refresh \
+      --baseline-dir .bench-baselines                # snapshot cwd -> dir
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+import time
+
+COMMITTED_DIR = os.path.join(os.path.dirname(__file__), "baselines")
+CACHE_DIR = ".bench-baselines"
+LATENCY_FLOOR_S = 0.05          # absolute slack for *_s latency metrics
+LATENCY_FLOOR_MS = 50.0         # ... and for *_ms metrics
+THROUGHPUT_KEYS = ("qps", "tuples_per_s")
+RATIO_KEYS = ("x", "p95_ratio")            # machine-independent, unscaled
+LATENCY_KEYS = ("queue_latency_p95_s", "e2e_latency_p95_s",
+                "window_ms_p95")
+# row-size fields: a smoke-mode artifact must not be gated against a
+# full-mode baseline (or vice versa) — scales differ by design
+SIZE_KEYS = ("queries", "windows")
+
+
+def calibration_score(repeats: int = 5) -> float:
+    """Single-core CPU speed score (higher = faster), stable to ~10%: the
+    median time of a fixed numpy workload.  Used to scale throughput and
+    latency expectations between the machine that wrote a baseline and the
+    machine running the gate."""
+    import numpy as np
+    a = np.random.default_rng(0).normal(size=(384, 384)).astype(np.float32)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        b = a
+        for _ in range(24):
+            b = np.tanh(b @ a * 0.01)
+        b.sum()
+        ts.append(time.perf_counter() - t0)
+    return 1.0 / float(np.median(ts))
+
+
+def baseline_dir(flag: str | None) -> str:
+    """Precedence: explicit flag > REPRO_BASELINE_DIR > the actions/cache
+    refresh dir (when populated) > the committed snapshot."""
+    if flag:
+        return flag
+    env = os.environ.get("REPRO_BASELINE_DIR")
+    if env:
+        return env
+    if glob.glob(os.path.join(CACHE_DIR, "*.json")):
+        return CACHE_DIR
+    return COMMITTED_DIR
+
+
+def _rows_by_mode(path: str) -> dict:
+    with open(path) as fh:
+        rows = json.load(fh)
+    return {(r.get("bench"), r.get("mode")): r for r in rows}
+
+
+def _artifact_of(baseline_file: str) -> str:
+    return "BENCH_" + os.path.basename(baseline_file)
+
+
+def compare(new_rows: dict, old_rows: dict, *, tol: float,
+            factor: float) -> tuple[list[str], list[str]]:
+    """(failures, notes) for one artifact.  ``factor`` > 1 means this
+    machine is SLOWER than the baseline's by that ratio."""
+    failures, notes = [], []
+    for key, old in old_rows.items():
+        new = new_rows.get(key)
+        tag = f"{key[0]}/{key[1]}"
+        if new is None:
+            failures.append(f"{tag}: row disappeared from the artifact")
+            continue
+        if any(k in old and k in new
+               and max(old[k], new[k]) > 2 * max(min(old[k], new[k]), 1)
+               for k in SIZE_KEYS):
+            notes.append(f"{tag}: scale changed (smoke vs full?) — skipped")
+            continue
+        for k in THROUGHPUT_KEYS + RATIO_KEYS:
+            if k not in old or k not in new:
+                continue
+            scale = 1.0 if k in RATIO_KEYS else factor
+            floor = old[k] / scale * (1.0 - tol)
+            if new[k] < floor:
+                failures.append(
+                    f"{tag}: {k} regressed {old[k]} -> {new[k]} "
+                    f"(floor {floor:.3g} at tol {tol:.0%}, "
+                    f"machine factor {factor:.2f})")
+        for k in LATENCY_KEYS:
+            if k not in old or k not in new:
+                continue
+            abs_floor = LATENCY_FLOOR_MS if k.endswith("_ms") \
+                or "_ms_" in k else LATENCY_FLOOR_S
+            ceil = old[k] * factor * (1.0 + tol) + abs_floor
+            if new[k] > ceil:
+                failures.append(
+                    f"{tag}: {k} regressed {old[k]} -> {new[k]} "
+                    f"(ceiling {ceil:.3g} at tol {tol:.0%}, "
+                    f"machine factor {factor:.2f})")
+    for key in new_rows.keys() - old_rows.keys():
+        notes.append(f"{key[0]}/{key[1]}: new row (no baseline) — passes")
+    return failures, notes
+
+
+def check(base_dir: str, tol: float) -> int:
+    base_files = sorted(f for f in glob.glob(os.path.join(base_dir, "*.json"))
+                        if os.path.basename(f) != "calibration.json")
+    if not base_files:
+        print(f"[trajectory] no baselines under {base_dir} — nothing gated")
+        return 0
+    cal_path = os.path.join(base_dir, "calibration.json")
+    factor = 1.0
+    if os.path.exists(cal_path):
+        with open(cal_path) as fh:
+            base_score = json.load(fh)["score"]
+        cur_score = calibration_score()
+        # clamp: a wildly different score means the micro-benchmark is not
+        # representative on this machine; better a strict gate than none
+        factor = min(max(base_score / cur_score, 0.25), 4.0)
+        print(f"[trajectory] calibration: baseline {base_score:.1f}, "
+              f"here {cur_score:.1f} -> machine factor {factor:.2f}")
+
+    failed = False
+    for bf in base_files:
+        artifact = _artifact_of(bf)
+        if not os.path.exists(artifact):
+            print(f"FAIL {artifact}: baseline exists but the bench no "
+                  "longer writes the artifact")
+            failed = True
+            continue
+        failures, notes = compare(_rows_by_mode(artifact), _rows_by_mode(bf),
+                                  tol=tol, factor=factor)
+        for n in notes:
+            print(f"  note {artifact}: {n}")
+        for f in failures:
+            print(f"FAIL {artifact}: {f}")
+        if not failures:
+            print(f"  ok  {artifact} vs {bf}")
+        failed = failed or bool(failures)
+    for artifact in sorted(glob.glob("BENCH_*.json")):
+        if not os.path.exists(os.path.join(
+                base_dir, artifact[len("BENCH_"):])):
+            print(f"  note {artifact}: no baseline yet — run --refresh")
+    print("[trajectory] " + ("REGRESSED" if failed else "ok"))
+    return 1 if failed else 0
+
+
+def refresh(base_dir: str) -> int:
+    artifacts = sorted(glob.glob("BENCH_*.json"))
+    if not artifacts:
+        print("[trajectory] --refresh found no BENCH_*.json in cwd")
+        return 1
+    os.makedirs(base_dir, exist_ok=True)
+    for artifact in artifacts:
+        dest = os.path.join(base_dir, artifact[len("BENCH_"):])
+        with open(artifact) as fh:
+            rows = json.load(fh)
+        with open(dest, "w") as fh:
+            json.dump(rows, fh, indent=1)
+        print(f"[trajectory] {artifact} -> {dest}")
+    with open(os.path.join(base_dir, "calibration.json"), "w") as fh:
+        json.dump({"score": calibration_score()}, fh)
+    print(f"[trajectory] refreshed {len(artifacts)} baselines in {base_dir}")
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-dir", default=None)
+    ap.add_argument("--tol", type=float, default=float(
+        os.environ.get("REPRO_TRAJECTORY_TOL", "0.20")))
+    ap.add_argument("--refresh", action="store_true",
+                    help="snapshot cwd artifacts as the new baseline "
+                         "instead of gating")
+    args = ap.parse_args(argv)
+    if args.refresh:
+        # --refresh defaults to the cache dir: refreshing the COMMITTED
+        # snapshot is a deliberate, reviewed act (run it with
+        # --baseline-dir benchmarks/baselines and commit the diff)
+        return refresh(args.baseline_dir or CACHE_DIR)
+    return check(baseline_dir(args.baseline_dir), args.tol)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -26,6 +26,15 @@ serving must beat the retired per-query kernel loop on q/s, bit-identically
 per slot of a mixed-seed batch, with zero recompiles/filter rebuilds after
 warmup (seeds are runtime kernel operands) — asserted — and writes the
 ``BENCH_kernel.json`` artifact.
+
+``--async-trace`` runs the async-tier gate: one Poisson arrival trace
+(rate = 60% of the warmed engine's calibrated capacity) replayed three
+ways — caller-driven step loop, ``AsyncJoinServer`` event loop, 2-replica
+``AsyncJoinFrontDoor`` — with per-query bit-parity across all three
+asserted, async q/s >= step loop, and async queue-latency p95 STRICTLY
+below it.  Writes ``BENCH_async.json``.  ``REPRO_TRACE_QUERIES`` scales
+the trace (smoke default 48 in CI, 1024 full; set it to 1_000_000 for a
+million-query soak).
 """
 
 from __future__ import annotations
@@ -89,6 +98,10 @@ def run() -> list[dict]:
             server.submit(_request(tenant, rels, q))
     server.run()
     warm = server.diagnostics.snapshot()
+    # the timed phase reuses the warmed server: clear the latency rings so
+    # the reported percentiles cover ONLY the timed segment (warmup-era
+    # waits include compile time and used to leak into the p95)
+    server.diagnostics.reset_latencies()
 
     for q in range(queries):
         for tenant, rels in datasets.items():
@@ -116,6 +129,204 @@ def run() -> list[dict]:
             queue_latency_max_s=round(snap["queue_latency_max_s"], 4)),
         row("serve", mode="speedup",
             x=round((served / serve_s) / (cold_n / cold_s), 2)),
+    ]
+
+
+# -- replayed-trace gate: async event-loop tier vs the caller-driven step
+# -- loop on one arrival trace (the ISSUE-6 acceptance bench) ---------------
+
+TRACE_Q = int(os.environ.get("REPRO_TRACE_QUERIES", scaled(1024, 48)))
+TRACE_UTIL = 0.6               # arrival rate as a fraction of capacity
+EXACT_EVERY = 7                # every 7th trace query is an exact budget
+
+
+def _trace(queries: int) -> list[tuple]:
+    """Deterministic mixed tenant trace: two shape classes interleaved,
+    per-tenant query ids cycling the batch width (id diversity keeps sigma
+    pipelining from starving batches), a sprinkle of exact budgets.  No
+    latency budgets: their sample sizing consults the MEASURED filter time,
+    so they are timing-dependent by design and would break the bit-parity
+    assertion between replays."""
+    trace = []
+    tenants = ("small", "large")
+    for q in range(queries):
+        tenant = tenants[q % 2]
+        budget = QueryBudget() if q % EXACT_EVERY == EXACT_EVERY - 1 \
+            else QueryBudget(error=0.5)
+        trace.append((tenant, dict(
+            budget=budget, query_id=f"{tenant}/sum{(q // 2) % SLOTS}",
+            seed=100 + q, filter_seed=7, max_strata=MAX_STRATA,
+            b_max=B_MAX)))
+    return trace
+
+
+def _warm_for_trace(engine: JoinServer) -> None:
+    """Compile every (stage, class, fill-bucket) combination the replay
+    can hit: fills of 1/2/4 per tenant, each stage mix (the continuous
+    batcher dispatches partial fills, so the pow2 buckets 1 and 2 matter
+    as much as the full batch).  Warm ids are disjoint from trace ids, so
+    both replays start with identical (empty) trace sigma state."""
+    plans = ([("exact", 0)], [("err", 0)],
+             [("err", 0), ("exact", 1)],
+             [("err", 0), ("err", 1), ("err", 2), ("exact", 3)])
+    k = 0
+    for tenant in ("small", "large"):
+        for plan in plans:
+            for kind, j in plan:
+                budget = QueryBudget() if kind == "exact" \
+                    else QueryBudget(error=0.5)
+                engine.submit(JoinRequest(
+                    dataset=tenant, budget=budget,
+                    query_id=f"{tenant}/warm{j}", seed=900 + k,
+                    filter_seed=7, max_strata=MAX_STRATA, b_max=B_MAX))
+                k += 1
+            engine.run()
+
+
+def _calibrate_qps(server: JoinServer) -> float:
+    """Full-batch capacity of the warmed engine (queries/s); the trace's
+    Poisson arrival rate is TRACE_UTIL of this, so the same trace loads
+    fast and slow machines equally."""
+    n = 0
+    t0 = time.perf_counter()
+    for r in range(2):
+        for q in range(SLOTS):
+            for tenant in ("small", "large"):
+                server.submit(JoinRequest(
+                    dataset=tenant, budget=QueryBudget(error=0.5),
+                    query_id=f"{tenant}/cal{q}", seed=500 + SLOTS * r + q,
+                    filter_seed=7, max_strata=MAX_STRATA, b_max=B_MAX))
+                n += 1
+        server.run()
+    return n / (time.perf_counter() - t0)
+
+
+def _replay_step_loop(server: JoinServer, trace: list,
+                      arrivals) -> tuple[list, float]:
+    """The caller-driven pattern the async tier retires: admit arrivals,
+    step only once some shape class can fill a whole batch (or the trace
+    is exhausted) — batch width bought with queue-latency budget."""
+    from collections import Counter
+    results, i = [], 0
+    t0 = time.perf_counter()
+    while i < len(trace) or server.queue:
+        now = time.perf_counter() - t0
+        while i < len(trace) and arrivals[i] <= now:
+            tenant, kw = trace[i]
+            results.append(server.submit(JoinRequest(dataset=tenant, **kw)))
+            i += 1
+        counts = Counter(r._class for r in server.queue)
+        if counts and (i == len(trace)
+                       or max(counts.values()) >= SLOTS):
+            server.step()
+        elif i < len(trace):
+            time.sleep(min(max(arrivals[i] - now, 0.0), 0.002))
+    return results, time.perf_counter() - t0
+
+
+def _replay_async(submit, trace: list, arrivals) -> tuple[list, float]:
+    """Replay the same arrivals against an async submit(): ingestion
+    returns futures immediately; the event loop batches continuously."""
+    futs = []
+    t0 = time.perf_counter()
+    for (tenant, kw), at in zip(trace, arrivals):
+        lag = at - (time.perf_counter() - t0)
+        if lag > 0:
+            time.sleep(lag)
+        futs.append(submit(JoinRequest(dataset=tenant, **kw)))
+    results = [f.result(timeout=600) for f in futs]
+    return results, time.perf_counter() - t0
+
+
+def _latency_pcts(results: list) -> dict:
+    import numpy as np
+    queue = np.asarray([r.queue_latency_s for r in results], np.float64)
+    e2e = np.asarray([r.e2e_latency_s for r in results], np.float64)
+    return {"queue_latency_p50_s": round(float(np.percentile(queue, 50)), 4),
+            "queue_latency_p95_s": round(float(np.percentile(queue, 95)), 4),
+            "e2e_latency_p95_s": round(float(np.percentile(e2e, 95)), 4)}
+
+
+def _assert_parity(name: str, base: list, other: list) -> None:
+    """Per-trace-index bit-identity across replays: slot results never
+    depend on batch composition and per-id sigma sequences are
+    order-deterministic, so ANY divergence is a scheduling bug."""
+    assert len(base) == len(other)
+    for i, (a, b) in enumerate(zip(base, other)):
+        ra, rb = a.result, b.result
+        assert (float(ra.estimate) == float(rb.estimate)
+                and float(ra.error_bound) == float(rb.error_bound)
+                and float(ra.count) == float(rb.count)), \
+            f"{name}: trace index {i} ({a.query_id}) diverged"
+
+
+def run_async_trace() -> list[dict]:
+    """Replayed-trace gate: the async event-loop tier must serve the SAME
+    Poisson arrival trace at q/s >= the step loop with queue-latency p95
+    STRICTLY below it, bit-identically per query — all asserted.  A
+    2-replica front-door leg (tenant sharding + work stealing) replays the
+    trace too, also bit-identically.  Smoke-scaled in CI; set
+    REPRO_TRACE_QUERIES for large (e.g. million-query) replays."""
+    import numpy as np
+    from repro.runtime.async_serve import AsyncJoinFrontDoor, AsyncJoinServer
+
+    datasets = _workload(seed=7)
+    trace = _trace(TRACE_Q)
+
+    # --- step-loop baseline ------------------------------------------------
+    sync = JoinServer(batch_slots=SLOTS)
+    for tenant, rels in datasets.items():
+        sync.register_dataset(tenant, rels)
+    _warm_for_trace(sync)
+    rate = TRACE_UTIL * _calibrate_qps(sync)
+    arrivals = np.random.default_rng(11).exponential(
+        1.0 / rate, size=len(trace)).cumsum()
+    compiles0 = sync.diagnostics.compiles
+    sync_res, sync_s = _replay_step_loop(sync, trace, arrivals)
+    assert sync.diagnostics.compiles == compiles0, "step loop recompiled"
+
+    # --- async event loop, same engine configuration -----------------------
+    with AsyncJoinServer(JoinServer(batch_slots=SLOTS)) as srv:
+        for tenant, rels in datasets.items():
+            srv.register_dataset(tenant, rels)
+        srv.call(lambda: _warm_for_trace(srv.engine)).result()
+        compiles0 = srv.snapshot()["compiles"]
+        async_res, async_s = _replay_async(srv.submit, trace, arrivals)
+        snap = srv.snapshot()
+    assert snap["compiles"] == compiles0, "async tier recompiled"
+    _assert_parity("async-vs-sync", sync_res, async_res)
+
+    # --- 2-replica front door: tenant sharding + work stealing -------------
+    with AsyncJoinFrontDoor(replicas=2, batch_slots=SLOTS) as fd:
+        for tenant, rels in datasets.items():
+            fd.register_dataset(tenant, rels)
+        for rep in fd.replicas:
+            rep.call(lambda eng=rep.engine: _warm_for_trace(eng)).result()
+        fd_res, fd_s = _replay_async(fd.submit, trace, arrivals)
+        steals = fd.steals
+    _assert_parity("front-door-vs-sync", sync_res, fd_res)
+
+    sync_p, async_p, fd_p = (_latency_pcts(r)
+                             for r in (sync_res, async_res, fd_res))
+    sync_qps = len(trace) / sync_s
+    async_qps = len(trace) / async_s
+    assert async_qps >= sync_qps, \
+        f"async tier lost throughput: {async_qps:.2f} < {sync_qps:.2f} q/s"
+    assert async_p["queue_latency_p95_s"] < sync_p["queue_latency_p95_s"], \
+        (f"async queue p95 not below step loop: {async_p} vs {sync_p}")
+    return [
+        row("async", mode="step-loop", queries=len(trace),
+            seconds=round(sync_s, 3), qps=round(sync_qps, 2), **sync_p),
+        row("async", mode="event-loop", queries=len(trace),
+            seconds=round(async_s, 3), qps=round(async_qps, 2), **async_p,
+            backfilled=snap["backfilled"], recompiles_after_warmup=0),
+        row("async", mode="front-door2", queries=len(trace),
+            seconds=round(fd_s, 3), qps=round(len(trace) / fd_s, 2),
+            **fd_p, steals=steals),
+        row("async", mode="speedup",
+            x=round(async_qps / sync_qps, 3),
+            p95_ratio=round(sync_p["queue_latency_p95_s"]
+                            / max(async_p["queue_latency_p95_s"], 1e-9), 2)),
     ]
 
 
@@ -174,6 +385,9 @@ def run_kernels() -> list[dict]:
 
     serve_s, served_seg = float("inf"), 0
     for seg in range(segments):
+        # one warmed server serves all three segments: reset the latency
+        # rings per segment so no segment's percentiles mix earlier samples
+        server.diagnostics.reset_latencies()
         for q in range(queries):
             submit(SLOTS + q)
         for q in range(2):               # mixed fills in the timed phase
@@ -339,6 +553,16 @@ def main() -> None:
     if "--distributed-child" in sys.argv:
         for r in _all_distributed_legs():
             print(json.dumps(r), flush=True)
+        return
+    if "--async-trace" in sys.argv:
+        # replayed-trace gate: async tier q/s >= step loop, queue p95
+        # strictly below, per-query bit-parity — asserted in
+        # run_async_trace; the artifact feeds check_trajectory
+        arows = run_async_trace()
+        with open("BENCH_async.json", "w") as fh:
+            json.dump(arows, fh, indent=1)
+        print("wrote BENCH_async.json")
+        print_rows(arows)
         return
     if "--kernels" in sys.argv:
         # kernel-path regression gate: batched Pallas serving must beat the

@@ -12,6 +12,10 @@ Usage:
   # distributed: one batched step spans all mesh devices
   PYTHONPATH=src python -m repro.launch.join_serve --mesh 8
 
+  # always-on async tier: event-loop replicas, continuous batching,
+  # tenant sharding + work stealing behind one front door
+  PYTHONPATH=src python -m repro.launch.join_serve --async --replicas 2
+
 ``--mesh N`` re-execs under ``--xla_force_host_platform_device_count`` when
 the process has fewer than N devices (the flag must be set before jax
 initializes), then serves through the shard_map pipeline.
@@ -28,6 +32,7 @@ import time
 from repro.core.budget import QueryBudget
 from repro.core.cost import CostModel
 from repro.data.synthetic import overlapping_relations
+from repro.runtime.async_serve import AsyncJoinFrontDoor
 from repro.runtime.join_serve import JoinRequest, JoinServer
 
 
@@ -88,6 +93,62 @@ def run(*, tenants: int = 4, queries_per_tenant: int = 8, slots: int = 4,
             **d.snapshot()}
 
 
+def run_async(*, tenants: int = 4, queries_per_tenant: int = 8,
+              slots: int = 4, base_n: int = 1 << 12, seed: int = 0,
+              replicas: int = 2, mesh_devices: int = 0,
+              serve_mode: str = "exact-parity") -> dict:
+    """The same tenant workload through the always-on async tier: replica
+    event loops with continuous batching behind a work-stealing front door
+    (``runtime/async_serve.py``); submissions return futures immediately."""
+    def factory(i: int) -> JoinServer:
+        mesh = None
+        if mesh_devices:
+            import jax
+            import numpy as np
+            from jax.sharding import Mesh
+            mesh = Mesh(np.array(jax.devices()[:mesh_devices]), ("data",))
+        return JoinServer(batch_slots=slots,
+                          cost_model=CostModel(beta_compute=1e-7,
+                                               epsilon=1e-3),
+                          mesh=mesh, serve_mode=serve_mode)
+
+    budgets = [QueryBudget(error=0.5), QueryBudget(latency_s=0.5),
+               QueryBudget()]
+    with AsyncJoinFrontDoor(replicas=replicas, engine_factory=factory) as fd:
+        for t in range(tenants):
+            n = base_n << (t % 2)      # two capacity shape classes
+            rels = overlapping_relations([n, n], 0.1, seed=seed + t)
+            fd.register_dataset(f"tenant{t}", rels)
+        t0 = time.perf_counter()
+        futs = []
+        for q in range(queries_per_tenant):
+            for t in range(tenants):   # interleave tenants (worst case)
+                futs.append(fd.submit(JoinRequest(
+                    dataset=f"tenant{t}", budget=budgets[t % len(budgets)],
+                    query_id=f"tenant{t}/agg", seed=seed + q,
+                    max_strata=2048, b_max=512)))
+        reqs = [f.result(timeout=600) for f in futs]
+        dt = time.perf_counter() - t0
+        snap = fd.snapshot()
+
+    qps = len(reqs) / max(dt, 1e-9)
+    where = f"mesh[{mesh_devices}]" if mesh_devices else "single-device"
+    print(f"[join-serve --async] {len(reqs)} queries from {tenants} tenants "
+          f"in {dt:.2f}s ({qps:.1f} q/s) on {where} x{replicas} replicas "
+          f"steals={snap['steals']}")
+    for name, rd in snap["replicas"].items():
+        print(f"  {name}: queries={rd['queries']} steps={rd['steps']} "
+              f"max_batch={rd['max_batch']} backfilled={rd['backfilled']} "
+              f"stolen_in={rd['stolen_in']} "
+              f"queue_p95={rd['queue_latency_p95_s']:.3f}s "
+              f"e2e_p95={rd['e2e_latency_p95_s']:.3f}s")
+    for r in reqs[:3]:
+        print(f"  {r.query_id}: estimate={float(r.result.estimate):.1f} "
+              f"+-{float(r.result.error_bound):.1f} "
+              f"sampled={bool(r.result.diagnostics.sampled)}")
+    return {"queries": len(reqs), "seconds": dt, "qps": qps, **snap}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tenants", type=int, default=4)
@@ -100,6 +161,11 @@ def main() -> None:
                     choices=["exact-parity", "psum"],
                     help="mesh merge strategy: bit-parity gather vs "
                          "capacity-planned psum")
+    ap.add_argument("--async", dest="async_", action="store_true",
+                    help="serve through the async tier (event-loop "
+                         "replicas + front door) instead of the step loop")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="front-door replica event loops (with --async)")
     args = ap.parse_args()
     if args.mesh:
         import jax
@@ -116,9 +182,17 @@ def main() -> None:
             raise SystemExit(subprocess.call(
                 [sys.executable, "-m", "repro.launch.join_serve",
                  *sys.argv[1:]], env=env))
-    run(tenants=args.tenants, queries_per_tenant=args.queries_per_tenant,
-        slots=args.slots, base_n=args.base_n, mesh_devices=args.mesh,
-        serve_mode=args.serve_mode)
+    if args.async_:
+        run_async(tenants=args.tenants,
+                  queries_per_tenant=args.queries_per_tenant,
+                  slots=args.slots, base_n=args.base_n,
+                  replicas=args.replicas, mesh_devices=args.mesh,
+                  serve_mode=args.serve_mode)
+    else:
+        run(tenants=args.tenants,
+            queries_per_tenant=args.queries_per_tenant,
+            slots=args.slots, base_n=args.base_n, mesh_devices=args.mesh,
+            serve_mode=args.serve_mode)
 
 
 if __name__ == "__main__":

@@ -1,13 +1,16 @@
-"""Distributed runtime: train/serve step factories, sharded atomic
+"""Distributed runtime: train step factories, sharded atomic
 checkpointing with elastic restore, fault-tolerance scaffolding
 (step retries, straggler detection, deterministic data re-generation),
-and the batched multi-tenant ApproxJoin serving engine (join_serve)."""
+the batched multi-tenant ApproxJoin serving engine (join_serve), and the
+always-on async serving tier over it (async_serve)."""
 
 from repro.runtime.train import TrainState, make_train_step, train_state_init
 from repro.runtime.checkpoint import (latest_step, restore_checkpoint,
                                       save_checkpoint)
 from repro.runtime.join_serve import JoinRequest, JoinServer
+from repro.runtime.async_serve import AsyncJoinFrontDoor, AsyncJoinServer
 
 __all__ = ["TrainState", "make_train_step", "train_state_init",
            "save_checkpoint", "restore_checkpoint", "latest_step",
-           "JoinRequest", "JoinServer"]
+           "JoinRequest", "JoinServer", "AsyncJoinServer",
+           "AsyncJoinFrontDoor"]

@@ -1,0 +1,483 @@
+"""Always-on asynchronous serving tier: per-replica event loops with
+continuous batching, and a tenant-sharded multi-replica front door.
+
+The engine (``runtime/join_serve.py``) is caller-driven: nothing happens
+between ``step()`` calls, so a query's queue latency is however long the
+driver sleeps, not however long the engine needs — ``BENCH_serve.json``
+recorded queue-latency p95s of seconds against ~130 ms of per-window
+compute.  This module closes that gap the way LLM serving engines do:
+
+* :class:`AsyncJoinServer` runs ONE engine on a dedicated event-loop
+  thread.  ``submit()`` is ingestion only — it appends to a lock-protected
+  ingress ring and returns a ``concurrent.futures.Future`` immediately;
+  admission (bucketing, sharding, validation) and every device dispatch
+  happen on the loop thread.  The loop serves **continuous batches**: it
+  never waits for a full same-class batch.  Whatever is queued when the
+  previous step retires is dispatched after at most ``linger_s`` of slot
+  backfill, and requests arriving while a step is in flight land in the
+  ingress ring and backfill the NEXT batch's open slots instead of waiting
+  for a caller to come back.  The linger is cut short the moment some
+  shape class can fill every slot, or a queued latency budget's deadline
+  comes within ``deadline_margin_s``; scheduling *within* a step stays the
+  engine's deadline-aware ``_take_batch``.
+* :class:`AsyncJoinFrontDoor` runs N replica event loops and shards
+  TENANTS (the ``query_id`` prefix, :func:`~.join_serve.tenant_of`) across
+  them — sticky, so one tenant's sigma feedback stays sequential on one
+  replica.  All replicas share one ``SigmaRegistry``.  An idle replica
+  STEALS the entire pending run of one tenant from the most backed-up
+  replica: whole-tenant moves preserve same-``query_id`` order (nothing of
+  that tenant is in flight while the victim's engine lock is held), so
+  stolen work is bit-identical to unstolen work.  Streaming tenants are
+  pinned — their admission bookkeeping and session state live on the
+  owning replica.
+
+Correctness contract: per-query results through the async tier are
+bit-identical to the synchronous server (and therefore to a direct
+``approx_join``).  Slot results never depend on batch composition, and
+per-``query_id`` execution order — the only thing sigma feedback
+observes — is preserved end to end: ingress is FIFO, the engine's
+scheduler keeps same-id FIFO (sigma pipelining defers repeats without
+reordering), and stealing moves a tenant wholesale under the front-door
+lock.  Asserted in ``tests/test_async_serve.py`` and replayed at trace
+scale by ``benchmarks/serve_bench.py --async-trace``.
+
+Locking (strict order ``front-door _alock`` > ``replica _elock`` >
+``replica _cv``; no thread ever acquires leftward while holding
+rightward): ``_cv`` guards the ingress ring and is held only for ring
+append/swap; ``_elock`` guards every engine mutation — the loop holds it
+across ``step()``, a thief acquires the victim's with a short bounded wait
+(flagging ``_steal_wanted`` so a saturated victim loop yields between
+steps; a victim mid-step past the wait is simply skipped this round);
+``_alock`` serialises tenant routing
+against steals so a submission racing a steal cannot land behind its
+predecessors.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import Counter
+from concurrent.futures import Future
+from functools import partial
+from typing import Callable, Optional, Sequence
+
+from repro.core.cost import SigmaRegistry
+from repro.core.relation import Relation
+from repro.runtime.join_serve import JoinRequest, JoinServer, tenant_of
+from repro.runtime.stream_join import StreamJoinServer, StreamJoinSession
+
+DEFAULT_LINGER_S = 0.002
+
+
+class AsyncJoinServer:
+    """One engine + one event-loop thread: ingestion-decoupled, always on.
+
+    ``engine`` is any :class:`~.join_serve.JoinServer` (a
+    :class:`~.stream_join.StreamJoinServer` enables :meth:`open_stream` /
+    :meth:`push`); with ``engine=None`` one is constructed from
+    ``engine_kw``.  The server owns the engine exclusively once
+    constructed: callers interact through :meth:`submit` (returns a
+    future), :meth:`call` (run a closure on the loop thread — the door to
+    every other engine method), and :meth:`close`.
+    """
+
+    def __init__(self, engine: Optional[JoinServer] = None, *,
+                 linger_s: float = DEFAULT_LINGER_S,
+                 deadline_margin_s: float = 0.010,
+                 idle_wait_s: float = 0.010,
+                 name: str = "replica0",
+                 front_door: Optional["AsyncJoinFrontDoor"] = None,
+                 **engine_kw):
+        self.engine = JoinServer(**engine_kw) if engine is None else engine
+        assert self.engine.on_done is None, \
+            "engine already owned by an async tier"
+        self.engine.on_done = self._on_done
+        self.linger_s = linger_s
+        self.deadline_margin_s = deadline_margin_s
+        self.idle_wait_s = idle_wait_s
+        self.name = name
+        self.error: Optional[BaseException] = None
+        self.stats = {"ingested": 0, "calls": 0, "backfilled": 0,
+                      "stolen_in": 0, "stolen_out": 0}
+        self._front = front_door
+        # ingress ring: ("req", JoinRequest, Future) | ("call", fn, Future)
+        self._ingress: list[tuple] = []
+        self._cv = threading.Condition()
+        self._elock = threading.RLock()
+        self._running = True
+        self._in_linger = False
+        self._steal_wanted = threading.Event()
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name=f"async-join-{name}")
+        self._thread.start()
+
+    # -- ingestion (any thread) ---------------------------------------------
+
+    def submit(self, req: JoinRequest) -> Future:
+        """Enqueue one query; returns a future resolving to the served
+        request (``req.result`` populated; ``req.shed`` set if admission
+        dropped it).  O(1): admission and execution happen on the loop."""
+        fut: Future = Future()
+        now = time.perf_counter()
+        with self._cv:
+            self._check_open()
+            if not req._ingest_t:
+                req._ingest_t = now
+            self._ingress.append(("req", req, fut))
+            self._cv.notify_all()
+        return fut
+
+    def call(self, fn: Callable) -> Future:
+        """Run ``fn()`` on the event-loop thread (between steps), resolving
+        to its return value — the safe door to every engine method that
+        ``submit`` doesn't cover (``register_dataset``, ``open_stream``,
+        diagnostics mutation, ...)."""
+        fut: Future = Future()
+        with self._cv:
+            self._check_open()
+            self._ingress.append(("call", fn, fut))
+            self._cv.notify_all()
+        return fut
+
+    def register_dataset(self, name: str, rels: Sequence[Relation]) -> None:
+        self.call(partial(self.engine.register_dataset, name, rels)).result()
+
+    def open_stream(self, name: str, spec, **kw) -> StreamJoinSession:
+        """Open a streaming session on the loop thread (engine must be a
+        ``StreamJoinServer``).  Interact with the session via :meth:`push`;
+        results arrive through the returned window futures."""
+        assert isinstance(self.engine, StreamJoinServer), \
+            "open_stream needs a StreamJoinServer engine"
+        return self.call(
+            partial(self.engine.open_stream, name, spec, **kw)).result()
+
+    def push(self, session: StreamJoinSession,
+             rels: Sequence[Relation]) -> list[Future]:
+        """Admit one micro-batch per side; returns one future per window
+        that became due.  A future resolves when its window is served — or
+        immediately with ``.shed`` set if per-tenant admission later drops
+        it (the engine's shed hook fires this tier's resolver)."""
+        def _push():
+            out = session.push(rels)
+            futs = []
+            for req in out:
+                f: Future = Future()
+                req._future = f
+                futs.append(f)
+            return futs
+        return self.call(_push).result()
+
+    def backlog(self) -> int:
+        """Pending request count (ingress ring + engine queue)."""
+        return len(self._ingress) + len(self.engine.queue)
+
+    def snapshot(self) -> dict:
+        with self._elock:
+            d = self.engine.diagnostics.snapshot()
+        d.update(self.stats)
+        d["backlog"] = self.backlog()
+        return d
+
+    def close(self, drain: bool = True, timeout: float = 60.0) -> None:
+        """Stop the loop; with ``drain`` (default) serve everything pending
+        first.  Unserved requests' futures fail with ``RuntimeError``."""
+        if drain:
+            deadline = time.monotonic() + timeout
+            while (self.backlog() and self.error is None
+                   and self._thread.is_alive()
+                   and time.monotonic() < deadline):
+                time.sleep(0.001)
+        with self._cv:
+            self._running = False
+            self._cv.notify_all()
+        self._thread.join(timeout)
+        self._fail_pending(RuntimeError(f"AsyncJoinServer {self.name} "
+                                        "closed"))
+
+    def __enter__(self) -> "AsyncJoinServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close(drain=exc == (None, None, None))
+
+    # -- event loop (loop thread only) --------------------------------------
+
+    def _loop(self) -> None:
+        try:
+            while self._running:
+                if self._steal_wanted.is_set():
+                    # a thief is parked on _elock: a saturated loop holds it
+                    # back-to-back (drain -> linger -> step), so yield for a
+                    # moment or the steal can never win the reacquire race
+                    time.sleep(0.001)
+                self._drain()
+                if not self.engine.queue:
+                    if self._front is not None \
+                            and self._front._steal_for(self):
+                        continue
+                    with self._cv:
+                        if self._running and not self._ingress:
+                            self._cv.wait(self.idle_wait_s)
+                    continue
+                self._linger()
+                if not self._running:
+                    break
+                with self._elock:
+                    self.engine.step()
+        except BaseException as e:  # noqa: BLE001 — fail futures, don't hang
+            self.error = e
+            self._fail_pending(e)
+
+    def _drain(self) -> int:
+        """Move the ingress ring into the engine (admission on the loop
+        thread).  Per-item failures (validation errors) fail that item's
+        future only."""
+        with self._cv:
+            items, self._ingress = self._ingress, []
+        if not items:
+            return 0
+        admitted = 0
+        with self._elock:
+            for kind, payload, fut in items:
+                try:
+                    if kind == "req":
+                        payload._future = fut
+                        self.engine.submit(payload)
+                        self.stats["ingested"] += 1
+                        admitted += 1
+                    else:
+                        fut.set_result(payload())
+                        self.stats["calls"] += 1
+                except Exception as e:  # noqa: BLE001
+                    fut.set_exception(e)
+        return admitted
+
+    def _linger(self) -> None:
+        """Continuous batching: give open slots up to ``linger_s`` to
+        backfill from the ingress ring, cut short by a fillable batch or an
+        imminent deadline.  This is the ONLY place the loop trades latency
+        for batch width, and the trade is bounded."""
+        if self.linger_s <= 0:
+            return
+        t_end = time.perf_counter() + self.linger_s
+        while self._running:
+            with self._elock:
+                if self._batch_ready():
+                    return
+                guard = self._earliest_deadline() - self.deadline_margin_s
+            now = time.perf_counter()
+            if now >= t_end or now >= guard:
+                return
+            with self._cv:
+                if not self._ingress:
+                    self._cv.wait(max(min(t_end, guard) - now, 0.0))
+            self.stats["backfilled"] += self._drain()
+
+    def _batch_ready(self) -> bool:
+        """True when some shape class can fill every slot of its next
+        batch — lingering past that point buys nothing."""
+        counts = Counter(r._class for r in self.engine.queue)
+        return any(n >= self.engine._slot_cap(cls)
+                   for cls, n in counts.items())
+
+    def _earliest_deadline(self) -> float:
+        return min((self.engine._deadline(r) for r in self.engine.queue),
+                   default=float("inf"))
+
+    # -- completion / shutdown ----------------------------------------------
+
+    def _on_done(self, req: JoinRequest) -> None:
+        """Engine completion hook: resolve the request's future (served or
+        shed).  Runs on the loop thread, result fully populated."""
+        fut = req._future
+        if fut is not None:
+            req._future = None
+            if not fut.done():
+                fut.set_result(req)
+
+    def _check_open(self) -> None:
+        if self.error is not None:
+            raise RuntimeError(
+                f"AsyncJoinServer {self.name} failed") from self.error
+        if not self._running:
+            raise RuntimeError(f"AsyncJoinServer {self.name} is closed")
+
+    def _fail_pending(self, exc: BaseException) -> None:
+        with self._cv:
+            self._running = False
+            items, self._ingress = self._ingress, []
+            self._cv.notify_all()
+        futs = [fut for _, _, fut in items]
+        with self._elock:
+            futs += [r._future for r in self.engine.queue
+                     if r._future is not None]
+        for fut in futs:
+            if not fut.done():
+                fut.set_exception(exc)
+
+    # -- work stealing (called by the front door, victim side) ---------------
+
+    def _release_one_tenant(self) -> Optional[tuple]:
+        """Cut ONE tenant's entire pending run out of this replica for a
+        steal: ``(tenant, admitted requests, raw ingress items)`` or None.
+        Bounded-blocking on the engine lock: ``_steal_wanted`` makes the
+        victim's loop yield between steps, and the thief waits briefly — a
+        victim mid-step for longer than the wait is skipped this round
+        rather than stalled on.  The oldest queued non-streaming tenant is
+        picked (FIFO fairness; streaming tenants are pinned)."""
+        self._steal_wanted.set()
+        try:
+            if not self._elock.acquire(timeout=0.05):
+                return None
+        finally:
+            self._steal_wanted.clear()
+        try:
+            with self._cv:
+                pinned = {tenant_of(r.query_id) for r in self.engine.queue
+                          if r.stream is not None}
+                pinned |= {tenant_of(it[1].query_id) for it in self._ingress
+                           if it[0] == "req" and it[1].stream is not None}
+                tenant = next(
+                    (tenant_of(r.query_id) for r in self.engine.queue
+                     if tenant_of(r.query_id) not in pinned), None)
+                if tenant is None:
+                    tenant = next(
+                        (tenant_of(it[1].query_id) for it in self._ingress
+                         if it[0] == "req"
+                         and tenant_of(it[1].query_id) not in pinned), None)
+                if tenant is None:
+                    return None
+                admitted = [r for r in self.engine.queue
+                            if tenant_of(r.query_id) == tenant]
+                self.engine.queue = [r for r in self.engine.queue
+                                     if tenant_of(r.query_id) != tenant]
+                moved = [it for it in self._ingress if it[0] == "req"
+                         and tenant_of(it[1].query_id) == tenant]
+                if moved:
+                    self._ingress = [it for it in self._ingress
+                                     if it not in moved]
+                self.stats["stolen_out"] += len(admitted) + len(moved)
+                return tenant, admitted, moved
+        finally:
+            self._elock.release()
+
+    def _accept_stolen(self, admitted: list[JoinRequest],
+                       ingress_items: list[tuple]) -> None:
+        """Thief side: adopt a stolen tenant's pending run.  Admitted
+        requests keep their shape class — replicas must be homogeneous
+        (the front door builds them from one configuration)."""
+        if admitted:
+            with self._elock:
+                self.engine.queue.extend(admitted)
+        with self._cv:
+            if ingress_items:
+                self._ingress.extend(ingress_items)
+            self._cv.notify_all()
+        self.stats["stolen_in"] += len(admitted) + len(ingress_items)
+
+
+class AsyncJoinFrontDoor:
+    """N replica event loops behind one ``submit``: sticky tenant sharding,
+    shared sigma registry, work stealing.
+
+    Tenants (the ``query_id`` prefix) are assigned least-loaded-first on
+    first sight and stay put, so a tenant's sigma feedback chain runs
+    sequentially on one replica; an idle replica steals the whole pending
+    run of one tenant from the most backed-up replica (``steals`` counts
+    moves).  All replicas share ``self.sigma`` — safe because tenant
+    single-ownership means no two replicas ever update the same
+    ``query_id`` concurrently.  Replicas are homogeneous by construction:
+    one ``engine_factory`` (or one ``engine_kw`` set) builds them all, so
+    stolen requests' shape classes stay valid.
+    """
+
+    def __init__(self, *, replicas: int = 2,
+                 engine_factory: Optional[Callable[[int], JoinServer]] = None,
+                 sigma_registry: Optional[SigmaRegistry] = None,
+                 work_stealing: bool = True, steal_min_backlog: int = 2,
+                 linger_s: float = DEFAULT_LINGER_S, **engine_kw):
+        assert replicas >= 1, replicas
+        self.sigma = SigmaRegistry() if sigma_registry is None \
+            else sigma_registry
+        self.work_stealing = work_stealing
+        self.steal_min_backlog = steal_min_backlog
+        self.steals = 0
+        self._alock = threading.RLock()
+        self._assign: dict[str, AsyncJoinServer] = {}
+        self.replicas: list[AsyncJoinServer] = []
+        for i in range(replicas):
+            if engine_factory is not None:
+                eng = engine_factory(i)
+                eng.sigma = self.sigma        # shared: see class docstring
+            else:
+                eng = JoinServer(sigma_registry=self.sigma, **engine_kw)
+            self.replicas.append(AsyncJoinServer(
+                eng, name=f"replica{i}", linger_s=linger_s, front_door=self))
+
+    def submit(self, req: JoinRequest) -> Future:
+        """Route by tenant and enqueue.  The routing lock is held through
+        the replica enqueue so a submission can never race a steal of its
+        own tenant onto the wrong replica (reordering same-id requests)."""
+        req._ingest_t = time.perf_counter()
+        with self._alock:
+            return self._route(tenant_of(req.query_id)).submit(req)
+
+    def open_stream(self, name: str, spec, **kw):
+        """Open a streaming session on the tenant's replica; returns
+        ``(replica, session)`` — push via ``replica.push(session, ...)``.
+        The tenant is pinned (never stolen) for the session's life."""
+        with self._alock:
+            rep = self._route(name)
+        return rep, rep.open_stream(name, spec, **kw)
+
+    def register_dataset(self, name: str, rels: Sequence[Relation]) -> None:
+        """Broadcast: a stolen tenant's follow-up queries must resolve the
+        handle wherever they land."""
+        futs = [rep.call(partial(rep.engine.register_dataset, name, rels))
+                for rep in self.replicas]
+        for f in futs:
+            f.result()
+
+    def _route(self, tenant: str) -> AsyncJoinServer:
+        rep = self._assign.get(tenant)
+        if rep is None:
+            rep = min(self.replicas, key=lambda r: r.backlog())
+            self._assign[tenant] = rep
+        return rep
+
+    def _steal_for(self, thief: AsyncJoinServer) -> bool:
+        """Move one whole tenant from the most backed-up replica to an idle
+        ``thief``.  Returns True if work moved."""
+        if not self.work_stealing or len(self.replicas) < 2:
+            return False
+        with self._alock:
+            for victim in sorted((r for r in self.replicas if r is not thief),
+                                 key=lambda r: -r.backlog()):
+                if victim.backlog() < self.steal_min_backlog:
+                    break
+                got = victim._release_one_tenant()
+                if got is None:
+                    continue
+                tenant, admitted, ingress_items = got
+                self._assign[tenant] = thief
+                thief._accept_stolen(admitted, ingress_items)
+                self.steals += 1
+                return True
+        return False
+
+    def snapshot(self) -> dict:
+        return {"steals": self.steals,
+                "tenants": {t: rep.name for t, rep in self._assign.items()},
+                "replicas": {rep.name: rep.snapshot()
+                             for rep in self.replicas}}
+
+    def close(self, drain: bool = True) -> None:
+        for rep in self.replicas:
+            rep.close(drain=drain)
+
+    def __enter__(self) -> "AsyncJoinFrontDoor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close(drain=exc == (None, None, None))

@@ -1,7 +1,7 @@
 """Batched multi-tenant ApproxJoin serving engine — single-device or mesh.
 
-The LM ``Server`` (runtime/serve.py) batches token decodes across slots; the
-``JoinServer`` does the same for ApproxJoin queries.  A :class:`JoinRequest`
+The ``JoinServer`` batches ApproxJoin queries the way LLM serving engines
+batch token decodes across slots.  A :class:`JoinRequest`
 carries relations (or a named dataset handle), a :class:`QueryBudget`, the
 aggregate/expression, and a tenant ``query_id``.  The engine:
 
@@ -125,6 +125,14 @@ AGGS = ("sum", "count", "avg", "stdev")
 SERVE_MODES = ("exact-parity", "psum")
 
 
+def tenant_of(query_id: str) -> str:
+    """Tenant key of a query id — the ``'/'``-prefix convention
+    (``'tenantA/sum0'`` -> ``'tenantA'``; un-prefixed ids are their own
+    tenant).  The front door shards and steals by this key, and per-tenant
+    latency percentiles group by it."""
+    return query_id.split("/", 1)[0]
+
+
 def bloom_overlap_estimate(rels: Sequence[Relation], fp_rate: float = 0.01,
                            seed: int = 0) -> float:
     """Planning-time live-fraction estimate from the Bloom intersection.
@@ -211,9 +219,20 @@ class JoinRequest:
     result: Optional[JoinResult] = None
     done: bool = False
     shed: bool = False                 # dropped by admission control, unserved
-    queue_latency_s: float = 0.0
+    queue_latency_s: float = 0.0       # ingest -> dispatch (batch former wait)
+    e2e_latency_s: float = 0.0         # ingest -> complete
     _class: Optional[ShapeClass] = field(default=None, repr=False)
     _submit_t: float = field(default=0.0, repr=False)
+    # ingest -> dispatch -> complete timestamps (perf_counter).  The async
+    # tier stamps _ingest_t at front-door ingestion, BEFORE engine
+    # admission, so queue latency covers the ingress ring too; the
+    # synchronous path stamps it in submit() (== _submit_t).
+    _ingest_t: float = field(default=0.0, repr=False)
+    _dispatch_t: float = field(default=0.0, repr=False)
+    _complete_t: float = field(default=0.0, repr=False)
+    # per-query completion future (async tier); resolved by the engine's
+    # on_done hook for served AND shed requests
+    _future: Optional[object] = field(default=None, repr=False)
     _fps: Optional[list[str]] = field(default=None, repr=False)
     # prebuilt per-side filter words (e.g. the OR of cached sub-window
     # words); when set, the batch path uses them verbatim instead of
@@ -232,11 +251,17 @@ class ServerDiagnostics:
     exact_queries: int = 0
     sampled_queries: int = 0
     kernel_queries: int = 0
-    queue_latency_s: float = 0.0    # summed over finished queries
-    # bounded ring of recent per-query queue latencies; snapshot() reduces
-    # it to p50/p95/max (the distribution the deadline-aware admission
-    # consults — a running sum cannot see tail latency)
+    queue_latency_s: float = 0.0    # summed ingest->dispatch over finished
+    e2e_latency_s: float = 0.0      # summed ingest->complete over finished
+    # bounded rings of recent per-query latencies; snapshot() reduces each
+    # to p50/p95/max (the distributions the deadline-aware admission and
+    # the async tier's SLO reporting consult — a running sum cannot see
+    # tail latency)
     queue_latencies: list = field(default_factory=list, repr=False)
+    e2e_latencies: list = field(default_factory=list, repr=False)
+    # tenant -> (queue ring, e2e ring), same bound: a front door reading
+    # one replica snapshot can attribute a latency regression to a tenant
+    tenant_latencies: dict = field(default_factory=dict, repr=False)
     sigma_deferrals: int = 0        # same-id repeats pushed to the next step
     deadline_promotions: int = 0    # backlog steps served out of FIFO order
     filter_s: float = 0.0           # summed batch filter-stage wall time
@@ -261,21 +286,51 @@ class ServerDiagnostics:
     dist_wire_bytes_model: float = 0.0
     max_batch: int = 0
 
+    def note_latency(self, tenant: str, queue_s: float, e2e_s: float,
+                     cap: int) -> None:
+        """Record one finished query's ingest->dispatch / ingest->complete
+        latencies into the global and per-tenant bounded rings."""
+        self.queue_latency_s += queue_s
+        self.e2e_latency_s += e2e_s
+        per = self.tenant_latencies.setdefault(tenant, ([], []))
+        for ring, x in ((self.queue_latencies, queue_s),
+                        (self.e2e_latencies, e2e_s),
+                        (per[0], queue_s), (per[1], e2e_s)):
+            ring.append(x)
+            if len(ring) > cap:
+                del ring[:len(ring) - cap]
+
+    def reset_latencies(self) -> None:
+        """Clear the latency sample rings (cumulative counters stay).  A
+        bench reusing one warmed server calls this between timed segments
+        so warmup-era samples cannot leak into a later segment's
+        percentiles."""
+        self.queue_latencies.clear()
+        self.e2e_latencies.clear()
+        self.tenant_latencies.clear()
+
+    @staticmethod
+    def _pcts(lat: list, prefix: str) -> dict:
+        if lat:
+            p50, p95 = np.percentile(np.asarray(lat, np.float64), [50, 95])
+            return {f"{prefix}_p50_s": float(p50),
+                    f"{prefix}_p95_s": float(p95),
+                    f"{prefix}_max_s": float(np.max(lat))}
+        return {f"{prefix}_p50_s": 0.0, f"{prefix}_p95_s": 0.0,
+                f"{prefix}_max_s": 0.0}
+
     def snapshot(self) -> dict:
         d = dict(vars(self))
         for key in ("per_device_shuffled_bytes", "per_device_dropped_tuples"):
             if d[key] is not None:
                 d[key] = [float(x) for x in d[key]]
-        lat = d.pop("queue_latencies")
-        if lat:
-            p50, p95 = np.percentile(np.asarray(lat, np.float64), [50, 95])
-            d["queue_latency_p50_s"] = float(p50)
-            d["queue_latency_p95_s"] = float(p95)
-            d["queue_latency_max_s"] = float(np.max(lat))
-        else:
-            d["queue_latency_p50_s"] = 0.0
-            d["queue_latency_p95_s"] = 0.0
-            d["queue_latency_max_s"] = 0.0
+        d.update(self._pcts(d.pop("queue_latencies"), "queue_latency"))
+        d.update(self._pcts(d.pop("e2e_latencies"), "e2e_latency"))
+        d["per_tenant"] = {
+            t: {"samples": len(qring),
+                **self._pcts(qring, "queue_latency"),
+                **self._pcts(ering, "e2e_latency")}
+            for t, (qring, ering) in d.pop("tenant_latencies").items()}
         return d
 
 
@@ -346,7 +401,8 @@ def _make_filter_build_kernels(num_blocks: int, interpret: bool):
 
 
 class JoinServer:
-    """Slot-based batched ApproxJoin engine (the LM ``Server``, for joins).
+    """Slot-based batched ApproxJoin engine (caller-driven ``step()`` loop;
+    ``runtime/async_serve.py`` wraps it into an always-on event loop).
 
     ``mesh=None`` serves every batch on the default device.  With a
     ``jax.sharding.Mesh``, registered datasets are sharded over
@@ -408,6 +464,10 @@ class JoinServer:
         self._filter_words: OrderedDict = OrderedDict()
         self.filter_cache_entries = filter_cache_entries
         self.diagnostics = ServerDiagnostics()
+        # completion callback (request -> None), fired by _notify_done for
+        # every finished or shed request; the async tier installs its
+        # future-resolver here
+        self.on_done = None
         self.mesh = mesh
         self.bucket_cap = bucket_cap
         if mesh is not None:
@@ -492,6 +552,10 @@ class JoinServer:
             req, () if req.use_kernels else self.mesh_shape, mode,
             self._planned_cap(req, mode))
         req._submit_t = time.perf_counter()
+        if not req._ingest_t:
+            # async ingestion pre-stamps _ingest_t at the front door so the
+            # ingress-ring wait counts; the synchronous path starts here
+            req._ingest_t = req._submit_t
         self.queue.append(req)
         return req
 
@@ -589,7 +653,10 @@ class JoinServer:
         exact budgets are best-effort (infinite deadline)."""
         if req.budget.latency_s is None:
             return float("inf")
-        return req._submit_t + req.budget.latency_s
+        # relative to INGESTION: through the async tier the caller's clock
+        # starts when submit() returns the future, not when the event loop
+        # admits the request (synchronously the two coincide)
+        return req._ingest_t + req.budget.latency_s
 
     def _slot_cap(self, cls: ShapeClass) -> int:
         """Batch width cap for one step of this shape class.
@@ -657,23 +724,34 @@ class JoinServer:
         if not self.queue:
             return 0
         cls, batch = self._take_batch()
+        t_dispatch = time.perf_counter()
         self.diagnostics.steps += 1
         self.diagnostics.max_batch = max(self.diagnostics.max_batch,
                                          len(batch))
         self._run_batch(cls, batch)
+        t_done = time.perf_counter()
         for req in batch:
+            req._dispatch_t = t_dispatch
+            req._complete_t = t_done
+            req.queue_latency_s = t_dispatch - req._ingest_t
+            req.e2e_latency_s = t_done - req._ingest_t
             req.done = True
-            req.queue_latency_s = time.perf_counter() - req._submit_t
-            self.diagnostics.queue_latency_s += req.queue_latency_s
-            self.diagnostics.queue_latencies.append(req.queue_latency_s)
+            self.diagnostics.note_latency(
+                tenant_of(req.query_id), req.queue_latency_s,
+                req.e2e_latency_s, self.latency_samples)
             self.diagnostics.queries += 1
             d = req.result.diagnostics
             self.diagnostics.shuffled_bytes_saved += float(
                 d.shuffled_bytes_repartition - d.shuffled_bytes_filtered)
-        lat = self.diagnostics.queue_latencies
-        if len(lat) > self.latency_samples:
-            del lat[:len(lat) - self.latency_samples]
+            self._notify_done(req)
         return len(batch)
+
+    def _notify_done(self, req: JoinRequest) -> None:
+        """Completion hook — fires once per finished OR shed request.  The
+        async tier resolves the request's per-query future here; the hook
+        runs after the result (or the shed flag) is fully populated."""
+        if self.on_done is not None:
+            self.on_done(req)
 
     def run(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):

@@ -418,4 +418,8 @@ class StreamJoinServer(JoinServer):
             self.queue = [r for r in self.queue if r is not victim]
             victim.shed = True
             self.stream_diagnostics.windows_shed += 1
+            # a shed window is terminal: fire the completion hook so an
+            # async caller's future resolves (with .shed set) instead of
+            # hanging forever on a window that will never be served
+            self._notify_done(victim)
         self.submit(req)

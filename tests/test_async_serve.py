@@ -1,0 +1,395 @@
+"""Async serving tier (``runtime/async_serve.py``): bit-identity of the
+event-loop path with the synchronous server and with direct ``approx_join``
+(including per-``query_id`` sigma sequences), backfill order preservation,
+deadline-aware admission through the ingress ring, front-door tenant
+sharding + work stealing, async streaming windows (served and shed), and
+the perf-trajectory gate (``benchmarks/check_trajectory.py``).
+
+This file is owned by the CI "async serving" leg (8 host devices) and
+excluded everywhere else — keep it runnable on 1 device: multi-device
+cases must skip, not fail.
+"""
+
+import json
+import sys
+import threading
+import time
+from concurrent.futures import Future
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from conftest import make_pair
+from repro.core.budget import QueryBudget
+from repro.core.cost import CostModel
+from repro.core.join import approx_join
+from repro.core.window import WindowSpec
+from repro.core.relation import relation
+from repro.runtime.async_serve import AsyncJoinFrontDoor, AsyncJoinServer
+from repro.runtime.join_serve import JoinRequest, JoinServer
+from repro.runtime.stream_join import StreamJoinServer
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+from benchmarks import check_trajectory  # noqa: E402
+
+MS, BM = 1024, 512   # max_strata / b_max used throughout
+
+
+def _identical(a, b):
+    """Bitwise equality of the user-facing result surface."""
+    return (float(a.estimate) == float(b.estimate)
+            and float(a.error_bound) == float(b.error_bound)
+            and float(a.count) == float(b.count)
+            and float(a.dof) == float(b.dof))
+
+
+def _req(rels, budget, qid, seed):
+    return JoinRequest(rels=rels, budget=budget, query_id=qid, seed=seed,
+                       max_strata=MS, b_max=BM)
+
+
+def _workload(rng, tenants=2, per_tenant=4):
+    """(rels, budget, qid, seed) tuples: tenants interleaved, repeated
+    query_ids so the sigma feedback chain is exercised, an exact budget
+    mixed in."""
+    pairs = [make_pair(rng, n=1 << 11, mu1=5.0 + 3 * t)
+             for t in range(tenants)]
+    out = []
+    for q in range(per_tenant):
+        for t in range(tenants):
+            budget = QueryBudget() if q == per_tenant - 1 \
+                else QueryBudget(error=0.5)
+            out.append((list(pairs[t]), budget,
+                        f"tenant{t}/sum{q % 2}", 40 + q))
+    return out
+
+
+def _sync_baseline(workload, **kw):
+    srv = JoinServer(batch_slots=4, **kw)
+    reqs = [srv.submit(_req(*w)) for w in workload]
+    srv.run()
+    return reqs
+
+
+# -- single replica ----------------------------------------------------------
+
+def test_async_bit_identical_to_sync_and_direct(rng):
+    workload = _workload(rng)
+    sync = _sync_baseline(workload)
+    with AsyncJoinServer(batch_slots=4) as srv:
+        futs = [srv.submit(_req(*w)) for w in workload]
+        reqs = [f.result(timeout=120) for f in futs]
+        snap = srv.snapshot()
+
+    for i, (r, s) in enumerate(zip(reqs, sync)):
+        assert r.done and not r.shed and _identical(r.result, s.result), i
+    # the first occurrence of each query_id equals direct approx_join
+    seen = set()
+    for (rels, budget, qid, seed), r in zip(workload, reqs):
+        if qid in seen:
+            continue
+        seen.add(qid)
+        direct = approx_join(rels, budget, max_strata=MS, b_max=BM,
+                             seed=seed)
+        assert _identical(r.result, direct), qid
+    # ingestion/dispatch/completion stamps are ordered, latencies positive
+    for r in reqs:
+        assert 0 < r._ingest_t <= r._dispatch_t <= r._complete_t
+        assert r.queue_latency_s >= 0 and r.e2e_latency_s > 0
+    # diagnostics carry the async surface
+    assert snap["ingested"] == len(workload) and snap["backlog"] == 0
+    assert snap["queries"] == len(workload)
+    assert 0 < snap["queue_latency_p50_s"] <= snap["queue_latency_p95_s"]
+    assert snap["e2e_latency_p95_s"] >= snap["queue_latency_p95_s"]
+    assert set(snap["per_tenant"]) == {"tenant0", "tenant1"}
+    assert snap["per_tenant"]["tenant0"]["samples"] == len(workload) // 2
+
+
+def test_async_backfill_never_reorders_same_id(rng):
+    """Seeded property: whatever slices of the stream land via mid-flight
+    backfill vs idle drain, same-``query_id`` requests dispatch in
+    submission order and results stay bit-identical to the sync server."""
+    workload = _workload(rng, tenants=2, per_tenant=6)
+    sync = _sync_baseline(workload)
+    prop_rng = np.random.default_rng(7)
+    for trial in range(3):
+        with AsyncJoinServer(batch_slots=4, linger_s=0.004) as srv:
+            futs = []
+            for w in workload:
+                futs.append(srv.submit(_req(*w)))
+                # jitter submissions so some requests arrive mid-step and
+                # enter through _linger backfill, others through idle drain
+                time.sleep(float(prop_rng.uniform(0, 0.004)))
+            reqs = [f.result(timeout=120) for f in futs]
+        order = {}
+        for i, ((_, _, qid, _), r) in enumerate(zip(workload, reqs)):
+            assert _identical(r.result, sync[i].result), (trial, i)
+            order.setdefault(qid, []).append(r._dispatch_t)
+        for qid, ts in order.items():
+            assert ts == sorted(ts), (trial, qid, ts)
+
+
+def test_async_deadline_scheduling_from_ingress(rng):
+    """A latency-budget query entering through the ingress ring is promoted
+    by the engine's deadline-aware scheduler: with the loop held until every
+    submission is ingested, the backlog drains in at most two waves, and the
+    latency query (submitted mid-burst) always lands in a backlogged queue —
+    so it must dispatch before every error query submitted after it."""
+    r1, r2 = make_pair(rng, n=1 << 11)
+    gate_open = threading.Event()
+    with AsyncJoinServer(batch_slots=2,
+                         cost_model=CostModel(beta_compute=1e-7,
+                                              epsilon=1e-3)) as srv:
+        gate = srv.call(gate_open.wait)     # hold the loop while we submit
+        early = [srv.submit(_req([r1, r2], QueryBudget(error=0.5),
+                                 f"t/e{i}", seed=50 + i)) for i in range(4)]
+        lat = srv.submit(_req([r1, r2], QueryBudget(latency_s=2.0),
+                              "t/lat", seed=99))
+        late = [srv.submit(_req([r1, r2], QueryBudget(error=0.5),
+                                f"t/e{4 + i}", seed=54 + i))
+                for i in range(4)]
+        gate_open.set()
+        gate.result(timeout=60)
+        done = [f.result(timeout=120) for f in early + [lat] + late]
+    lat_r, late_rs = done[4], done[5:]
+    assert lat_r.done and not lat_r.shed
+    assert lat_r._dispatch_t <= min(r._dispatch_t for r in late_rs)
+
+
+def test_async_close_rejects_new_submissions(rng):
+    r1, r2 = make_pair(rng, n=1 << 11)
+    srv = AsyncJoinServer(batch_slots=2)
+    f = srv.submit(_req([r1, r2], QueryBudget(error=0.5), "t/a", seed=1))
+    assert f.result(timeout=120).done
+    srv.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        srv.submit(_req([r1, r2], QueryBudget(error=0.5), "t/b", seed=2))
+
+
+# -- front door: sharding + stealing -----------------------------------------
+
+def test_front_door_steals_and_stays_bit_identical(rng):
+    workload = _workload(rng, tenants=4, per_tenant=4)
+    sync = _sync_baseline(workload)
+    with AsyncJoinFrontDoor(replicas=2, batch_slots=2) as fd:
+        # pre-assign every tenant to replica0 so replica1 starts idle and
+        # MUST steal to participate
+        with fd._alock:
+            for t in range(4):
+                fd._assign[f"tenant{t}"] = fd.replicas[0]
+        futs = [fd.submit(_req(*w)) for w in workload]
+        reqs = [f.result(timeout=120) for f in futs]
+        snap = fd.snapshot()
+    for i, (r, s) in enumerate(zip(reqs, sync)):
+        assert _identical(r.result, s.result), i
+    assert snap["steals"] > 0
+    served = {name: d["queries"] for name, d in snap["replicas"].items()}
+    assert served["replica1"] > 0 and sum(served.values()) == len(workload)
+
+
+def test_front_door_sticky_without_stealing(rng):
+    workload = _workload(rng, tenants=2, per_tenant=3)
+    with AsyncJoinFrontDoor(replicas=2, work_stealing=False,
+                            batch_slots=2) as fd:
+        with fd._alock:
+            for t in range(2):
+                fd._assign[f"tenant{t}"] = fd.replicas[0]
+        futs = [fd.submit(_req(*w)) for w in workload]
+        for f in futs:
+            assert f.result(timeout=120).done
+        snap = fd.snapshot()
+    assert snap["steals"] == 0
+    assert snap["replicas"]["replica1"]["queries"] == 0
+    assert snap["replicas"]["replica0"]["queries"] == len(workload)
+
+
+def test_front_door_dataset_broadcast(rng):
+    r1, r2 = make_pair(rng, n=1 << 11)
+    with AsyncJoinFrontDoor(replicas=2, batch_slots=2) as fd:
+        fd.register_dataset("shared", [r1, r2])
+        for rep in fd.replicas:
+            assert "shared" in rep.engine.datasets
+        f = fd.submit(JoinRequest(dataset="shared",
+                                  budget=QueryBudget(error=0.5),
+                                  query_id="x/q", seed=3,
+                                  max_strata=MS, b_max=BM))
+        assert f.result(timeout=120).done
+
+
+@pytest.mark.slow
+def test_async_mesh_parity(rng):
+    """Async tier over a device mesh matches the synchronous mesh server
+    bit for bit (the CI async leg runs with 8 forced host devices)."""
+    import jax
+    if jax.device_count() < 2:
+        pytest.skip("needs >=2 devices")
+    from jax.sharding import Mesh
+    ndev = min(jax.device_count(), 4)
+    workload = _workload(rng, tenants=2, per_tenant=2)
+
+    def mesh():
+        return Mesh(np.array(jax.devices()[:ndev]), ("data",))
+
+    sync = _sync_baseline(workload, mesh=mesh())
+
+    def factory(i):
+        return JoinServer(batch_slots=4, mesh=mesh())
+
+    with AsyncJoinFrontDoor(replicas=2, engine_factory=factory) as fd:
+        futs = [fd.submit(_req(*w)) for w in workload]
+        reqs = [f.result(timeout=300) for f in futs]
+    for i, (r, s) in enumerate(zip(reqs, sync)):
+        assert _identical(r.result, s.result), i
+
+
+# -- async streaming ---------------------------------------------------------
+
+def _mb(seed, n=512):
+    r = np.random.default_rng(seed)
+    return [relation(r.integers(0, 200, n).astype(np.uint32),
+                     r.normal(10, 2, n).astype(np.float32)),
+            relation(r.integers(150, 350, n).astype(np.uint32),
+                     r.normal(5, 1, n).astype(np.float32))]
+
+
+def test_async_stream_windows_bit_identical():
+    spec = WindowSpec(size=4, slide=1, sub_rows=512)
+    batches = [_mb(100 + i) for i in range(6)]
+
+    base = StreamJoinServer(batch_slots=2)
+    sess = base.open_stream("t", spec, budget=QueryBudget(error=0.5),
+                            max_strata=MS, b_max=BM, seed=3)
+    done = []
+    for mb in batches:
+        sess.push(mb)
+        base.run()
+        done += sess.drain()
+    assert [r.window_id for r in done] == [0, 1, 2]
+
+    with AsyncJoinServer(StreamJoinServer(batch_slots=2)) as srv:
+        asess = srv.open_stream("t", spec, budget=QueryBudget(error=0.5),
+                                max_strata=MS, b_max=BM, seed=3)
+        futs = []
+        for mb in batches:
+            futs.append(srv.push(asess, mb))
+        wins = [f.result(timeout=120) for fs in futs for f in fs]
+    assert [r.window_id for r in wins] == [0, 1, 2]
+    for a, b in zip(wins, done):
+        assert not a.shed and _identical(a.result, b.result), a.window_id
+
+
+def test_async_stream_shed_windows_resolve_futures():
+    """Per-tenant admission sheds the oldest queued window; the shed hook
+    must resolve the async caller's future (with ``.shed`` set) instead of
+    leaving it hanging.  The loop is held during the pushes so the shed
+    sequence is deterministic."""
+    spec = WindowSpec(size=1, slide=1, sub_rows=512)
+    with AsyncJoinServer(StreamJoinServer(batch_slots=4,
+                                          window_slots=1)) as srv:
+        sess = srv.open_stream("t", spec, budget=QueryBudget(error=0.5),
+                               max_strata=MS, b_max=BM, seed=3)
+
+        def _push_all():
+            # mirrors AsyncJoinServer.push, but all four pushes run in one
+            # loop turn: no window can be served between them, so with
+            # window_slots=1 exactly the first three are shed
+            pairs = []
+            for i in range(4):
+                for req in sess.push(_mb(200 + i)):
+                    f = Future()
+                    req._future = f
+                    pairs.append((req, f))
+            return pairs
+
+        pairs = srv.call(_push_all).result(timeout=120)
+        reqs = [f.result(timeout=120) for _, f in pairs]
+        shed_count = srv.engine.stream_diagnostics.windows_shed
+    assert len(reqs) == 4 and shed_count == 3
+    assert [r.shed for r in reqs] == [True, True, True, False]
+    assert reqs[-1].done and reqs[-1].result is not None
+
+
+# -- perf-trajectory gate ----------------------------------------------------
+
+def _rows(**over):
+    base = {"bench": "serve", "mode": "batched", "queries": 64,
+            "qps": 100.0, "queue_latency_p95_s": 0.10}
+    base.update(over)
+    return {("serve", "batched"): base}
+
+
+def test_trajectory_compare_throughput_and_latency():
+    old = _rows()
+    ok, notes = check_trajectory.compare(_rows(qps=95.0), old,
+                                         tol=0.20, factor=1.0)
+    assert ok == [] and notes == []
+    bad, _ = check_trajectory.compare(_rows(qps=75.0), old,
+                                      tol=0.20, factor=1.0)
+    assert bad and "qps regressed" in bad[0]
+    # latency has an absolute floor: 0.16 < 0.10*1.2 + 0.05 passes
+    ok, _ = check_trajectory.compare(_rows(queue_latency_p95_s=0.16), old,
+                                     tol=0.20, factor=1.0)
+    assert ok == []
+    bad, _ = check_trajectory.compare(_rows(queue_latency_p95_s=0.50), old,
+                                      tol=0.20, factor=1.0)
+    assert bad and "queue_latency_p95_s regressed" in bad[0]
+
+
+def test_trajectory_compare_scaling_rows_and_ratios():
+    old = _rows()
+    # a 2x slower machine is allowed 2x lower qps before tolerance
+    ok, _ = check_trajectory.compare(_rows(qps=45.0), old,
+                                     tol=0.20, factor=2.0)
+    assert ok == []
+    # a vanished row always fails
+    bad, _ = check_trajectory.compare({}, old, tol=0.20, factor=1.0)
+    assert bad and "disappeared" in bad[0]
+    # smoke-vs-full scale mismatch is skipped with a note, not gated
+    ok, notes = check_trajectory.compare(
+        _rows(queries=640, qps=10.0), old, tol=0.20, factor=1.0)
+    assert ok == [] and notes and "skipped" in notes[0]
+    # speedup ratios are machine-independent: the factor must NOT excuse
+    # a ratio regression
+    old_r = {("serve", "speedup"): {"bench": "serve", "mode": "speedup",
+                                    "x": 2.0}}
+    new_r = {("serve", "speedup"): {"bench": "serve", "mode": "speedup",
+                                    "x": 1.4}}
+    bad, _ = check_trajectory.compare(new_r, old_r, tol=0.20, factor=2.0)
+    assert bad and "x regressed" in bad[0]
+
+
+def test_trajectory_refresh_and_check_roundtrip(tmp_path, monkeypatch):
+    monkeypatch.chdir(tmp_path)
+    rows = [{"bench": "serve", "mode": "batched", "queries": 64,
+             "qps": 100.0, "queue_latency_p95_s": 0.10}]
+    (tmp_path / "BENCH_serve.json").write_text(json.dumps(rows))
+    base = str(tmp_path / "bl")
+    assert check_trajectory.refresh(base) == 0
+    assert (tmp_path / "bl" / "serve.json").exists()
+    assert (tmp_path / "bl" / "calibration.json").exists()
+    # same artifact gates clean; a big qps drop fails; a missing artifact
+    # with a baseline present fails
+    assert check_trajectory.main(["--baseline-dir", base]) == 0
+    rows[0]["qps"] = 10.0
+    (tmp_path / "BENCH_serve.json").write_text(json.dumps(rows))
+    assert check_trajectory.main(["--baseline-dir", base]) == 1
+    (tmp_path / "BENCH_serve.json").unlink()
+    assert check_trajectory.main(["--baseline-dir", base]) == 1
+
+
+def test_trajectory_baseline_dir_precedence(tmp_path, monkeypatch):
+    monkeypatch.chdir(tmp_path)
+    monkeypatch.delenv("REPRO_BASELINE_DIR", raising=False)
+    assert check_trajectory.baseline_dir("explicit") == "explicit"
+    monkeypatch.setenv("REPRO_BASELINE_DIR", "from-env")
+    assert check_trajectory.baseline_dir(None) == "from-env"
+    monkeypatch.delenv("REPRO_BASELINE_DIR")
+    # empty cache dir falls through to the committed snapshot ...
+    assert check_trajectory.baseline_dir(None) \
+        == check_trajectory.COMMITTED_DIR
+    # ... a populated one takes precedence
+    cache = tmp_path / check_trajectory.CACHE_DIR
+    cache.mkdir()
+    (cache / "serve.json").write_text("[]")
+    assert check_trajectory.baseline_dir(None) == check_trajectory.CACHE_DIR

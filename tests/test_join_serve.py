@@ -9,7 +9,8 @@ from repro.core.budget import QueryBudget
 from repro.core.cost import SigmaRegistry
 from repro.core.join import approx_join
 from repro.core.relation import bucket_capacity, bucket_to_pow2, relation
-from repro.runtime.join_serve import JoinRequest, JoinServer, shape_class_of
+from repro.runtime.join_serve import (JoinRequest, JoinServer,
+                                      ServerDiagnostics, shape_class_of)
 
 MS, BM = 1024, 512   # max_strata / b_max used throughout
 
@@ -259,6 +260,57 @@ def test_queue_latency_percentiles(rng):
         <= snap["queue_latency_max_s"]
     assert snap["queue_latency_max_s"] == \
         pytest.approx(max(q.queue_latency_s for q in qs))
+
+
+def test_latency_percentiles_empty_and_single_sample():
+    d = ServerDiagnostics()
+    snap = d.snapshot()                        # empty rings -> hard zeros
+    for k in ("queue_latency_p50_s", "queue_latency_p95_s",
+              "queue_latency_max_s", "e2e_latency_p50_s",
+              "e2e_latency_p95_s", "e2e_latency_max_s"):
+        assert snap[k] == 0.0
+    assert snap["per_tenant"] == {}
+    d.note_latency("a", 0.25, 0.5, 8)          # one sample: p50 == p95 == max
+    snap = d.snapshot()
+    assert snap["queue_latency_p50_s"] == snap["queue_latency_p95_s"] \
+        == snap["queue_latency_max_s"] == 0.25
+    assert snap["e2e_latency_p95_s"] == 0.5
+    assert snap["per_tenant"]["a"]["samples"] == 1
+    assert snap["per_tenant"]["a"]["queue_latency_p95_s"] == 0.25
+
+
+def test_latency_percentiles_ring_wrap_and_reset():
+    """The sample rings are bounded: with cap=4, eight samples 0..7 leave
+    exactly the last four, and the percentiles describe those — while the
+    cumulative sums keep covering every query ever served."""
+    d = ServerDiagnostics()
+    for i in range(8):
+        d.note_latency("t", float(i), float(i), 4)
+    assert d.queue_latencies == [4.0, 5.0, 6.0, 7.0]
+    assert d.tenant_latencies["t"][0] == [4.0, 5.0, 6.0, 7.0]
+    snap = d.snapshot()
+    assert snap["queue_latency_max_s"] == 7.0
+    assert snap["queue_latency_p50_s"] == pytest.approx(5.5)
+    assert snap["queue_latency_p95_s"] == pytest.approx(6.85)
+    assert d.queue_latency_s == sum(range(8))  # cumulative: unwindowed
+    d.reset_latencies()
+    assert d.queue_latencies == [] and d.e2e_latencies == []
+    assert d.tenant_latencies == {}
+    assert d.queue_latency_s == sum(range(8))  # sums survive a ring reset
+    assert d.snapshot()["queue_latency_p95_s"] == 0.0
+
+
+def test_latency_ring_bounded_by_server_cap(rng):
+    r1, r2 = make_pair(rng, n=1 << 11)
+    srv = JoinServer(batch_slots=2, latency_samples=2)
+    for q in range(5):
+        srv.submit(_req([r1, r2], QueryBudget(error=0.5), "t/a", seed=q))
+        srv.run()
+    d = srv.diagnostics
+    assert d.queries == 5
+    assert len(d.queue_latencies) == 2 and len(d.e2e_latencies) == 2
+    assert len(d.tenant_latencies["t"][0]) == 2
+    assert d.snapshot()["per_tenant"]["t"]["samples"] == 2
 
 
 def test_kernel_batch_mixed_seeds_bit_identical_to_per_query(rng):

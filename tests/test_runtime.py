@@ -1,5 +1,7 @@
 """Runtime: training loop, checkpoint atomicity + bit-exact resume,
-fault-tolerance paths, serving loop, gradient compression."""
+fault-tolerance paths, gradient compression.  (The join serving engine
+has its own test modules: test_join_serve*, test_stream_join,
+test_async_serve.)"""
 
 import os
 
@@ -15,7 +17,6 @@ from repro.runtime.checkpoint import (latest_step, restore_checkpoint,
                                       save_checkpoint)
 from repro.runtime.fault import (Heartbeat, StragglerMonitor, elastic_restore,
                                  guarded_step)
-from repro.runtime.serve import Request, Server
 from repro.runtime.train import make_train_step, train_state_init
 
 
@@ -151,19 +152,3 @@ def test_int8_compression_roundtrip_and_ef():
         acc_q += approx
     rel = float(jnp.abs(acc_q - acc_true).max() / jnp.abs(acc_true).max())
     assert rel < 0.05, rel
-
-
-def test_server_generates_and_respects_limits():
-    cfg = ARCHS["qwen2-0.5b"].reduced(vocab=64)
-    model = Model(cfg)
-    params = model.init(jax.random.key(0))
-    server = Server(model, params, batch_slots=2, max_seq=64, eos_id=0)
-    reqs = [Request(prompt=[3, 4, 5], max_new=6, temperature=0.0)
-            for _ in range(4)]
-    for r in reqs:
-        server.submit(r)
-    server.run(max_steps=200)
-    for r in reqs:
-        assert r.done and 1 <= len(r.out) <= 6
-    # greedy + same prompt -> identical outputs across requests
-    assert all(r.out == reqs[0].out for r in reqs[1:])
