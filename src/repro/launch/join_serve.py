@@ -96,10 +96,20 @@ def run(*, tenants: int = 4, queries_per_tenant: int = 8, slots: int = 4,
 def run_async(*, tenants: int = 4, queries_per_tenant: int = 8,
               slots: int = 4, base_n: int = 1 << 12, seed: int = 0,
               replicas: int = 2, mesh_devices: int = 0,
-              serve_mode: str = "exact-parity") -> dict:
+              serve_mode: str = "exact-parity",
+              checkpoint_dir: str | None = None,
+              kill_after: int = 0) -> dict:
     """The same tenant workload through the always-on async tier: replica
     event loops with continuous batching behind a work-stealing front door
-    (``runtime/async_serve.py``); submissions return futures immediately."""
+    (``runtime/async_serve.py``); submissions return futures immediately.
+
+    ``checkpoint_dir`` turns on per-replica engine checkpointing;
+    ``kill_after`` N > 0 additionally runs the fault drill — replica0 dies
+    (``InjectedFault``) after N served steps, the front door fails it over,
+    and a successor adopts its tenants from the newest checkpoint.  Futures
+    that were in flight on the dead replica fail with the injected fault
+    (counted below); their requests are re-served from the checkpoint by
+    the successor."""
     def factory(i: int) -> JoinServer:
         mesh = None
         if mesh_devices:
@@ -114,12 +124,17 @@ def run_async(*, tenants: int = 4, queries_per_tenant: int = 8,
 
     budgets = [QueryBudget(error=0.5), QueryBudget(latency_s=0.5),
                QueryBudget()]
-    with AsyncJoinFrontDoor(replicas=replicas, engine_factory=factory) as fd:
+    with AsyncJoinFrontDoor(replicas=replicas, engine_factory=factory,
+                            checkpoint_dir=checkpoint_dir) as fd:
         for t in range(tenants):
             n = base_n << (t % 2)      # two capacity shape classes
             rels = overlapping_relations([n, n], 0.1, seed=seed + t)
             fd.register_dataset(f"tenant{t}", rels)
         t0 = time.perf_counter()
+        if kill_after:
+            # arm before submitting: the drill must fire mid-workload, not
+            # race a drained queue (work stealing can empty replica0 fast)
+            fd.replicas[0].kill_after(kill_after)
         futs = []
         for q in range(queries_per_tenant):
             for t in range(tenants):   # interleave tenants (worst case)
@@ -127,7 +142,20 @@ def run_async(*, tenants: int = 4, queries_per_tenant: int = 8,
                     dataset=f"tenant{t}", budget=budgets[t % len(budgets)],
                     query_id=f"tenant{t}/agg", seed=seed + q,
                     max_strata=2048, b_max=512)))
-        reqs = [f.result(timeout=600) for f in futs]
+        reqs, killed = [], 0
+        for f in futs:
+            try:
+                reqs.append(f.result(timeout=600))
+            except BaseException:  # noqa: BLE001 — the injected fault
+                killed += 1
+        if kill_after:
+            fd.maybe_failover()
+            # re-served-from-checkpoint requests carry no caller futures:
+            # wait for the successor to drain its adopted queue
+            deadline = time.monotonic() + 600
+            while any(r.backlog() for r in fd.replicas
+                      if r.error is None) and time.monotonic() < deadline:
+                time.sleep(0.01)
         dt = time.perf_counter() - t0
         snap = fd.snapshot()
 
@@ -136,6 +164,10 @@ def run_async(*, tenants: int = 4, queries_per_tenant: int = 8,
     print(f"[join-serve --async] {len(reqs)} queries from {tenants} tenants "
           f"in {dt:.2f}s ({qps:.1f} q/s) on {where} x{replicas} replicas "
           f"steals={snap['steals']}")
+    if kill_after:
+        print(f"  fault drill: killed replica0 after {kill_after} steps; "
+              f"failovers={snap['failovers']} futures_failed={killed} "
+              f"(re-served from checkpoint by the successor)")
     for name, rd in snap["replicas"].items():
         print(f"  {name}: queries={rd['queries']} steps={rd['steps']} "
               f"max_batch={rd['max_batch']} backfilled={rd['backfilled']} "
@@ -166,7 +198,16 @@ def main() -> None:
                          "replicas + front door) instead of the step loop")
     ap.add_argument("--replicas", type=int, default=2,
                     help="front-door replica event loops (with --async)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="per-replica engine checkpointing directory "
+                         "(with --async): crash-safe serving state")
+    ap.add_argument("--kill-after", type=int, default=0,
+                    help="fault drill (with --async + --checkpoint-dir): "
+                         "kill replica0 after N served steps and fail its "
+                         "tenants over to a successor")
     args = ap.parse_args()
+    if args.kill_after and not (args.async_ and args.checkpoint_dir):
+        ap.error("--kill-after needs --async and --checkpoint-dir")
     if args.mesh:
         import jax
         if jax.device_count() < args.mesh:
@@ -187,7 +228,9 @@ def main() -> None:
                   queries_per_tenant=args.queries_per_tenant,
                   slots=args.slots, base_n=args.base_n,
                   replicas=args.replicas, mesh_devices=args.mesh,
-                  serve_mode=args.serve_mode)
+                  serve_mode=args.serve_mode,
+                  checkpoint_dir=args.checkpoint_dir,
+                  kill_after=args.kill_after)
     else:
         run(tenants=args.tenants,
             queries_per_tenant=args.queries_per_tenant,

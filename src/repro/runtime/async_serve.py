@@ -55,6 +55,7 @@ predecessors.
 
 from __future__ import annotations
 
+import os
 import threading
 import time
 from collections import Counter
@@ -64,6 +65,9 @@ from typing import Callable, Optional, Sequence
 
 from repro.core.cost import SigmaRegistry
 from repro.core.relation import Relation
+from repro.runtime.checkpoint import latest_step, save_checkpoint
+from repro.runtime.fault import (Heartbeat, InjectedFault,
+                                 elastic_restore_engine, guarded_step)
 from repro.runtime.join_serve import JoinRequest, JoinServer, tenant_of
 from repro.runtime.stream_join import StreamJoinServer, StreamJoinSession
 
@@ -88,6 +92,10 @@ class AsyncJoinServer:
                  idle_wait_s: float = 0.010,
                  name: str = "replica0",
                  front_door: Optional["AsyncJoinFrontDoor"] = None,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every_s: float = 0.0,
+                 heartbeat: Optional[Heartbeat] = None,
+                 step_retries: int = 0, step_backoff_s: float = 0.0,
                  **engine_kw):
         self.engine = JoinServer(**engine_kw) if engine is None else engine
         assert self.engine.on_done is None, \
@@ -99,8 +107,27 @@ class AsyncJoinServer:
         self.name = name
         self.error: Optional[BaseException] = None
         self.stats = {"ingested": 0, "calls": 0, "backfilled": 0,
-                      "stolen_in": 0, "stolen_out": 0}
+                      "stolen_in": 0, "stolen_out": 0, "checkpoints": 0}
         self._front = front_door
+        # crash safety: when checkpoint_dir is set the loop snapshots the
+        # engine (under _elock, between steps) whenever state changed and
+        # the cadence allows — every opportunity at the 0.0 default — and
+        # hands the host arrays to checkpoint.py's async writer, so a
+        # successor can elastic_restore the newest complete checkpoint
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every_s = checkpoint_every_s
+        self.heartbeat = heartbeat
+        # transient-failure policy for engine steps (guarded_step): 0
+        # retries by default — a serving step is not a training step whose
+        # inputs regenerate deterministically, so retry only on request
+        self.step_retries = step_retries
+        self.step_backoff_s = step_backoff_s
+        self._ckpt_writer: Optional[threading.Thread] = None
+        last = latest_step(checkpoint_dir) if checkpoint_dir else None
+        self._ckpt_step = 0 if last is None else last + 1
+        self._last_ckpt_t = 0.0
+        self._dirty = False
+        self._kill_after: Optional[int] = None
         # ingress ring: ("req", JoinRequest, Future) | ("call", fn, Future)
         self._ingress: list[tuple] = []
         self._cv = threading.Condition()
@@ -168,6 +195,23 @@ class AsyncJoinServer:
             return futs
         return self.call(_push).result()
 
+    def push_by_name(self, name: str, rels: Sequence[Relation]) -> \
+            list[Future]:
+        """:meth:`push` by session name — the session object is resolved on
+        the loop thread.  The failover door: after a replica death the
+        caller's session object belongs to the dead engine, but the
+        successor's restored session answers to the same name."""
+        def _push():
+            session = self.engine.sessions[name]
+            out = session.push(rels)
+            futs = []
+            for req in out:
+                f: Future = Future()
+                req._future = f
+                futs.append(f)
+            return futs
+        return self.call(_push).result()
+
     def backlog(self) -> int:
         """Pending request count (ingress ring + engine queue)."""
         return len(self._ingress) + len(self.engine.queue)
@@ -192,6 +236,8 @@ class AsyncJoinServer:
             self._running = False
             self._cv.notify_all()
         self._thread.join(timeout)
+        if self._ckpt_writer is not None:
+            self._ckpt_writer.join(timeout)
         self._fail_pending(RuntimeError(f"AsyncJoinServer {self.name} "
                                         "closed"))
 
@@ -206,16 +252,28 @@ class AsyncJoinServer:
     def _loop(self) -> None:
         try:
             while self._running:
+                if self.heartbeat is not None:
+                    self.heartbeat.beat(self.name)
+                if self._kill_after is not None and self._kill_after <= 0:
+                    # fault drill: die exactly like a crashed process would —
+                    # InjectedFault is a BaseException, so nothing below
+                    # absorbs it; the handler marks the replica dead and
+                    # fails every pending future, and the front door's
+                    # failover hands the newest checkpoint to a successor
+                    raise InjectedFault(f"replica {self.name} killed by "
+                                        "fault injection")
                 if self._steal_wanted.is_set():
                     # a thief is parked on _elock: a saturated loop holds it
                     # back-to-back (drain -> linger -> step), so yield for a
                     # moment or the steal can never win the reacquire race
                     time.sleep(0.001)
                 self._drain()
+                self._maybe_checkpoint()
                 if not self.engine.queue:
-                    if self._front is not None \
-                            and self._front._steal_for(self):
-                        continue
+                    if self._front is not None:
+                        self._front.maybe_failover(blocking=False)
+                        if self._front._steal_for(self):
+                            continue
                     with self._cv:
                         if self._running and not self._ingress:
                             self._cv.wait(self.idle_wait_s)
@@ -224,10 +282,60 @@ class AsyncJoinServer:
                 if not self._running:
                     break
                 with self._elock:
-                    self.engine.step()
+                    # guarded_step: transient device failures retry with
+                    # exponential backoff when step_retries > 0; an
+                    # InjectedFault passes straight through (BaseException)
+                    n = guarded_step(lambda _s, _b: self.engine.step(),
+                                     None, None, retries=self.step_retries,
+                                     backoff_s=self.step_backoff_s)
+                if n:
+                    self._dirty = True
+                    if self._kill_after is not None:
+                        self._kill_after -= 1
+                self._maybe_checkpoint()
         except BaseException as e:  # noqa: BLE001 — fail futures, don't hang
             self.error = e
             self._fail_pending(e)
+
+    def _maybe_checkpoint(self) -> None:
+        """Checkpoint the engine if state changed and the cadence allows.
+
+        Capture (snapshot + device_get) is synchronous under the engine
+        lock — the checkpoint is exactly the state at a step boundary —
+        then serialization rides checkpoint.py's async writer thread.  The
+        previous writer is joined first, so at most one write is in flight
+        and a reader joining ``_ckpt_writer`` sees every rename."""
+        if self.checkpoint_dir is None or not self._dirty:
+            return
+        now = time.monotonic()
+        if self._last_ckpt_t and \
+                now - self._last_ckpt_t < self.checkpoint_every_s:
+            return
+        if self._ckpt_writer is not None:
+            self._ckpt_writer.join()
+            if self._ckpt_writer.exception is not None:
+                # a writer failure must take the replica down loudly (the
+                # loop's error path), never quietly stop checkpointing while
+                # serving continues — that would hand a failover successor
+                # an arbitrarily stale snapshot
+                raise self._ckpt_writer.exception
+        with self._elock:
+            flat, meta = self.engine.snapshot_state()
+            meta["replica"] = self.name
+            self._ckpt_writer = save_checkpoint(
+                self.checkpoint_dir, self._ckpt_step, flat, sync=False,
+                extra=meta)
+        self._ckpt_step += 1
+        self._last_ckpt_t = now
+        self._dirty = False
+        self.stats["checkpoints"] += 1
+
+    def kill_after(self, steps: int) -> None:
+        """Fault injection: the loop raises :class:`InjectedFault` after
+        serving ``steps`` more engine steps (0 = at the next iteration).
+        The last checkpoint before death holds every admitted-but-unserved
+        request — the state a failover successor adopts."""
+        self._kill_after = steps
 
     def _drain(self) -> int:
         """Move the ingress ring into the engine (admission on the loop
@@ -237,6 +345,9 @@ class AsyncJoinServer:
             items, self._ingress = self._ingress, []
         if not items:
             return 0
+        # any drained item can mutate engine state ("call" items included:
+        # a streaming push emits windows) — mark for the next checkpoint
+        self._dirty = True
         admitted = 0
         with self._elock:
             for kind, payload, fut in items:
@@ -396,13 +507,24 @@ class AsyncJoinFrontDoor:
                  engine_factory: Optional[Callable[[int], JoinServer]] = None,
                  sigma_registry: Optional[SigmaRegistry] = None,
                  work_stealing: bool = True, steal_min_backlog: int = 2,
-                 linger_s: float = DEFAULT_LINGER_S, **engine_kw):
+                 linger_s: float = DEFAULT_LINGER_S,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every_s: float = 0.0,
+                 heartbeat_timeout_s: float = 5.0, **engine_kw):
         assert replicas >= 1, replicas
         self.sigma = SigmaRegistry() if sigma_registry is None \
             else sigma_registry
         self.work_stealing = work_stealing
         self.steal_min_backlog = steal_min_backlog
         self.steals = 0
+        self.failovers = 0
+        self.checkpoint_dir = checkpoint_dir
+        # every replica loop beats this once per iteration; a replica whose
+        # beat goes stale past the timeout (or whose .error is set — the
+        # fast path for in-process deaths) is declared dead by
+        # maybe_failover and its tenants move to a successor
+        self.heartbeat = Heartbeat(timeout_s=heartbeat_timeout_s)
+        self._failed: set[str] = set()
         self._alock = threading.RLock()
         self._assign: dict[str, AsyncJoinServer] = {}
         self.replicas: list[AsyncJoinServer] = []
@@ -412,8 +534,12 @@ class AsyncJoinFrontDoor:
                 eng.sigma = self.sigma        # shared: see class docstring
             else:
                 eng = JoinServer(sigma_registry=self.sigma, **engine_kw)
+            ckdir = os.path.join(checkpoint_dir, f"replica{i}") \
+                if checkpoint_dir is not None else None
             self.replicas.append(AsyncJoinServer(
-                eng, name=f"replica{i}", linger_s=linger_s, front_door=self))
+                eng, name=f"replica{i}", linger_s=linger_s, front_door=self,
+                checkpoint_dir=ckdir, checkpoint_every_s=checkpoint_every_s,
+                heartbeat=self.heartbeat))
 
     def submit(self, req: JoinRequest) -> Future:
         """Route by tenant and enqueue.  The routing lock is held through
@@ -421,7 +547,19 @@ class AsyncJoinFrontDoor:
         own tenant onto the wrong replica (reordering same-id requests)."""
         req._ingest_t = time.perf_counter()
         with self._alock:
+            self.maybe_failover()
             return self._route(tenant_of(req.query_id)).submit(req)
+
+    def push(self, name: str, rels: Sequence[Relation]) -> list[Future]:
+        """Push a micro-batch to stream ``name`` wherever its session lives
+        NOW — on the opening replica, or on the failover successor that
+        adopted it.  The crash-safe way to feed a stream: unlike holding the
+        ``(replica, session)`` pair from :meth:`open_stream`, this re-routes
+        after a failover."""
+        with self._alock:
+            self.maybe_failover()
+            rep = self._route(name)
+        return rep.push_by_name(name, rels)
 
     def open_stream(self, name: str, spec, **kw):
         """Open a streaming session on the tenant's replica; returns
@@ -439,20 +577,95 @@ class AsyncJoinFrontDoor:
         for f in futs:
             f.result()
 
+    def _live(self) -> list[AsyncJoinServer]:
+        return [r for r in self.replicas
+                if r.error is None and r.name not in self._failed]
+
     def _route(self, tenant: str) -> AsyncJoinServer:
         rep = self._assign.get(tenant)
-        if rep is None:
-            rep = min(self.replicas, key=lambda r: r.backlog())
+        if rep is None or rep.error is not None or rep.name in self._failed:
+            rep = min(self._live(), key=lambda r: r.backlog())
             self._assign[tenant] = rep
         return rep
 
+    # -- failover -----------------------------------------------------------
+
+    def maybe_failover(self, *, blocking: bool = True,
+                       now: Optional[float] = None) -> int:
+        """Detect dead replicas and fail each over; returns how many moved.
+
+        Death = replica ``.error`` set (the in-process fast path: the loop
+        thread died) OR its heartbeat stale past the timeout with the loop
+        thread actually gone.  The thread-liveness conjunct matters: a
+        replica mid-compile holds the engine lock for seconds without
+        beating, and failing over a replica that is merely slow would fork
+        its tenants' state (in a real multi-host deployment there is no
+        thread handle and the stale beat alone decides — after a fencing
+        step this test setup doesn't need).  Replica loops call this every
+        iteration with ``blocking=False`` — a loop must never block on the
+        routing lock while another thread holding it waits on that loop
+        (the ``call()`` rendezvous in ``_failover``)."""
+        if blocking:
+            self._alock.acquire()
+        elif not self._alock.acquire(blocking=False):
+            return 0
+        try:
+            stale = set(self.heartbeat.dead_hosts(now))
+            dead = [r for r in self.replicas if r.name not in self._failed
+                    and (r.error is not None
+                         or (r.name in stale
+                             and not r._thread.is_alive()))]
+            return sum(1 for r in dead if self._failover(r))
+        finally:
+            self._alock.release()
+
+    def _failover(self, dead: AsyncJoinServer) -> bool:
+        """Adopt ``dead``'s tenants onto a successor (caller holds _alock).
+
+        The successor restores the dead replica's newest complete engine
+        checkpoint (:func:`~repro.runtime.fault.elastic_restore_engine`,
+        merge semantics) ON ITS LOOP THREAD, then inherits every tenant
+        assignment.  Requests admitted after the last checkpoint are the
+        loss window — their futures already failed with the replica's
+        error, so callers know to resubmit; with ``checkpoint_every_s=0``
+        the window is empty at every step boundary."""
+        if dead.name in self._failed:
+            return False
+        alive = [r for r in self._live() if r is not dead]
+        if not alive:
+            return False        # nobody left to adopt; keep it failable
+        self._failed.add(dead.name)
+        successor = min(alive, key=lambda r: r.backlog())
+        if dead._ckpt_writer is not None:
+            dead._ckpt_writer.join()       # let the final write finish
+        if dead.checkpoint_dir is not None:
+            restore = partial(elastic_restore_engine, dead.checkpoint_dir,
+                              successor.engine)
+            if threading.current_thread() is successor._thread:
+                # the successor's own loop detected the death: run inline
+                # (a call() rendezvous with yourself never returns)
+                with successor._elock:
+                    restore()
+            else:
+                successor.call(restore).result()
+        for tenant, rep in list(self._assign.items()):
+            if rep is dead:
+                self._assign[tenant] = successor
+        self.failovers += 1
+        return True
+
     def _steal_for(self, thief: AsyncJoinServer) -> bool:
         """Move one whole tenant from the most backed-up replica to an idle
-        ``thief``.  Returns True if work moved."""
+        ``thief``.  Returns True if work moved.  Non-blocking on the
+        routing lock: the thief is a loop thread, and a loop thread parked
+        on ``_alock`` while its holder waits on that loop's ``call()``
+        queue would deadlock the pair — skipping a steal round is free."""
         if not self.work_stealing or len(self.replicas) < 2:
             return False
-        with self._alock:
-            for victim in sorted((r for r in self.replicas if r is not thief),
+        if not self._alock.acquire(blocking=False):
+            return False
+        try:
+            for victim in sorted((r for r in self._live() if r is not thief),
                                  key=lambda r: -r.backlog()):
                 if victim.backlog() < self.steal_min_backlog:
                     break
@@ -464,10 +677,13 @@ class AsyncJoinFrontDoor:
                 thief._accept_stolen(admitted, ingress_items)
                 self.steals += 1
                 return True
+        finally:
+            self._alock.release()
         return False
 
     def snapshot(self) -> dict:
-        return {"steals": self.steals,
+        return {"steals": self.steals, "failovers": self.failovers,
+                "failed": sorted(self._failed),
                 "tenants": {t: rep.name for t, rep in self._assign.items()},
                 "replicas": {rep.name: rep.snapshot()
                              for rep in self.replicas}}

@@ -25,7 +25,9 @@ import hashlib
 import json
 import os
 import re
+import shutil
 import threading
+import time
 import uuid
 from typing import Optional
 
@@ -33,6 +35,16 @@ import jax
 import numpy as np
 
 _SEP = "."
+
+# a .tmp-* dir older than this is a leftover from a crashed writer, not an
+# in-flight save — latest_step sweeps it
+_STALE_TMP_S = 600.0
+
+
+class CheckpointCorruptError(Exception):
+    """A checkpoint failed integrity validation (checksum/shape/missing leaf).
+
+    Raised instead of ``assert`` so the guard survives ``python -O``."""
 
 
 def _flatten(tree) -> dict:
@@ -70,24 +82,96 @@ def save_checkpoint(directory: str, step: int, tree, *, sync: bool = True,
         with open(os.path.join(tmp, "manifest.json"), "w") as fh:
             json.dump(manifest, fh)
         if os.path.exists(final):  # re-save of same step (retry path)
-            import shutil
             shutil.rmtree(final)
         os.rename(tmp, final)
 
     if sync:
         write()
         return None
-    th = threading.Thread(target=write, daemon=True)
+
+    def guarded():
+        # a daemon thread's traceback goes to stderr and vanishes — record
+        # the failure on the thread object so whoever joins it can surface
+        # it (otherwise checkpointing silently stops and the newest
+        # checkpoint goes stale without anyone noticing)
+        try:
+            write()
+        except BaseException as e:  # noqa: BLE001 — must not die silently
+            th.exception = e
+
+    th = threading.Thread(target=guarded, daemon=True)
+    th.exception = None
     th.start()
     return th
 
 
+def _manifest_ok(step_dir: str) -> bool:
+    """True iff the dir holds a readable, parseable manifest.json."""
+    try:
+        with open(os.path.join(step_dir, "manifest.json")) as fh:
+            json.load(fh)
+        return True
+    except (OSError, ValueError):
+        return False
+
+
 def latest_step(directory: str) -> Optional[int]:
+    """Newest *complete* checkpoint step, or None.
+
+    Torn ``step_*`` dirs (no readable manifest — e.g. a writer killed after
+    rename was prepared by hand, or a partial copy) are skipped, and stale
+    ``.tmp-*`` dirs left by a crashed async writer are swept so they cannot
+    accumulate."""
     if not os.path.isdir(directory):
         return None
-    steps = [int(m.group(1)) for d in os.listdir(directory)
-             if (m := re.fullmatch(r"step_(\d+)", d))]
+    steps = []
+    for d in os.listdir(directory):
+        full = os.path.join(directory, d)
+        if ".tmp-" in d:
+            try:
+                if time.time() - os.path.getmtime(full) > _STALE_TMP_S:
+                    shutil.rmtree(full, ignore_errors=True)
+            except OSError:
+                pass
+            continue
+        m = re.fullmatch(r"step_(\d+)", d)
+        if m and _manifest_ok(full):
+            steps.append(int(m.group(1)))
     return max(steps) if steps else None
+
+
+def _load_leaf(step_dir: str, key: str, meta: dict) -> np.ndarray:
+    try:
+        a = np.load(os.path.join(step_dir, meta["file"]))
+    except (OSError, ValueError) as e:
+        raise CheckpointCorruptError(f"unreadable leaf {key}: {e}") from e
+    if _sha(a) != meta["sha"]:
+        raise CheckpointCorruptError(f"checksum mismatch for {key}")
+    return a
+
+
+def load_checkpoint(directory: str, step: int) -> tuple[dict, dict]:
+    """Structure-free restore: ``(flat {path: np.ndarray}, extra)``.
+
+    Verifies every leaf's checksum and manifest shape.  Used when the
+    restoring side does not know the tree shapes in advance (e.g. adopting a
+    dead replica's engine state, whose queue depth and dataset sizes are
+    whatever they were at death)."""
+    d = os.path.join(directory, f"step_{step:08d}")
+    try:
+        with open(os.path.join(d, "manifest.json")) as fh:
+            manifest = json.load(fh)
+    except (OSError, ValueError) as e:
+        raise CheckpointCorruptError(
+            f"unreadable manifest for step {step}: {e}") from e
+    flat = {}
+    for k, meta in manifest["leaves"].items():
+        a = _load_leaf(d, k, meta)
+        if list(a.shape) != list(meta["shape"]):
+            raise CheckpointCorruptError(
+                f"shape mismatch for {k}: {list(a.shape)} vs {meta['shape']}")
+        flat[k] = a
+    return flat, manifest.get("extra", {})
 
 
 def restore_checkpoint(directory: str, step: int, like_tree, *,
@@ -98,17 +182,23 @@ def restore_checkpoint(directory: str, step: int, like_tree, *,
     this is the elastic path: the checkpoint does not care what mesh wrote
     it."""
     d = os.path.join(directory, f"step_{step:08d}")
-    with open(os.path.join(d, "manifest.json")) as fh:
-        manifest = json.load(fh)
+    try:
+        with open(os.path.join(d, "manifest.json")) as fh:
+            manifest = json.load(fh)
+    except (OSError, ValueError) as e:
+        raise CheckpointCorruptError(
+            f"unreadable manifest for step {step}: {e}") from e
     flat_like = _flatten(like_tree)
     flat_sh = _flatten(shardings) if shardings is not None else {}
     out = {}
     for k, leaf in flat_like.items():
+        if k not in manifest["leaves"]:
+            raise CheckpointCorruptError(f"missing leaf {k} in step {step}")
         meta = manifest["leaves"][k]
-        a = np.load(os.path.join(d, meta["file"]))
-        assert _sha(a) == meta["sha"], f"checksum mismatch for {k}"
-        assert tuple(a.shape) == tuple(leaf.shape), \
-            f"shape mismatch for {k}: {a.shape} vs {leaf.shape}"
+        a = _load_leaf(d, k, meta)
+        if tuple(a.shape) != tuple(leaf.shape):
+            raise CheckpointCorruptError(
+                f"shape mismatch for {k}: {a.shape} vs {leaf.shape}")
         out[k] = jax.device_put(a, flat_sh.get(k)) if k in flat_sh \
             else jax.device_put(a)
     # rebuild the tree

@@ -23,12 +23,28 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
-from repro.runtime.checkpoint import latest_step, restore_checkpoint
+from repro.runtime.checkpoint import (latest_step, load_checkpoint,
+                                      restore_checkpoint)
+
+
+class InjectedFault(BaseException):
+    """A deliberately injected replica death (``--kill-after`` fault drills).
+
+    Subclasses ``BaseException`` so it sails past ``guarded_step``'s retry
+    loop and the engine's own ``except Exception`` guards — an injected kill
+    must take the replica down the same way a real process death would, not
+    be absorbed by a retry."""
 
 
 def guarded_step(step_fn: Callable, state, batch, *, retries: int = 2,
-                 on_failure: Optional[Callable] = None):
-    """Run a step; on exception, rebuild inputs and retry (bounded)."""
+                 backoff_s: float = 0.0, on_failure: Optional[Callable] = None):
+    """Run a step; on exception, rebuild inputs and retry (bounded).
+
+    ``backoff_s`` > 0 sleeps ``backoff_s * 2**attempt`` between retries
+    (exponential), giving a flaky device/filesystem time to recover instead
+    of burning all retries in microseconds.  ``on_failure`` is shielded: an
+    exception inside the callback is swallowed so it can never mask the real
+    step error."""
     last = None
     for attempt in range(retries + 1):
         try:
@@ -36,7 +52,12 @@ def guarded_step(step_fn: Callable, state, batch, *, retries: int = 2,
         except Exception as e:  # noqa: BLE001 — device loss shows up this way
             last = e
             if on_failure is not None:
-                on_failure(attempt, e)
+                try:
+                    on_failure(attempt, e)
+                except Exception:  # noqa: BLE001 — never mask the step error
+                    pass
+            if backoff_s > 0.0 and attempt < retries:
+                time.sleep(backoff_s * (2.0 ** attempt))
     raise RuntimeError(f"step failed after {retries + 1} attempts") from last
 
 
@@ -68,7 +89,12 @@ class StragglerMonitor:
         if len(self.ewma) < 2:
             return []
         times = sorted(self.ewma.values())
-        median = times[len(times) // 2]
+        mid = len(times) // 2
+        # true median: average the two middle elements for even-length
+        # fleets (times[mid] alone is the upper-middle and over-reports,
+        # hiding real stragglers behind an inflated baseline)
+        median = times[mid] if len(times) % 2 else \
+            0.5 * (times[mid - 1] + times[mid])
         return [h for h, t in self.ewma.items()
                 if t > self.threshold * median]
 
@@ -84,3 +110,20 @@ def elastic_restore(ckpt_dir: str, like_state, *, shardings=None):
     state, extra = restore_checkpoint(ckpt_dir, step, like_state,
                                       shardings=shardings)
     return state, step, extra
+
+
+def elastic_restore_engine(ckpt_dir: str, engine) -> Optional[int]:
+    """Adopt a replica's newest engine checkpoint into ``engine``.
+
+    The serving analogue of :func:`elastic_restore`: engine snapshots are
+    structure-free (queue depth, dataset sizes and session buffers are
+    whatever they were at capture), so the restore goes through
+    ``load_checkpoint`` + ``engine.restore_state`` — merge semantics, the
+    failover successor path.  Returns the restored step, or None when the
+    directory holds no complete checkpoint (nothing to adopt)."""
+    step = latest_step(ckpt_dir)
+    if step is None:
+        return None
+    flat, extra = load_checkpoint(ckpt_dir, step)
+    engine.restore_state(flat, extra)
+    return step

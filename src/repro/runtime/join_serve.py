@@ -758,6 +758,154 @@ class JoinServer:
             if self.step() == 0:
                 break
 
+    # -- crash safety: snapshot / restore -----------------------------------
+    #
+    # A snapshot is ``(flat arrays, meta)``: every device-resident piece of
+    # engine state as a flat {key: array} dict (what runtime/checkpoint.py
+    # serializes, one .npy + checksum per key) plus a JSON-able meta dict
+    # carrying the host-side structure (dataset names/fingerprints, the
+    # sigma table, queue descriptors, scalar counters).  Keys are
+    # index-based (``ds/0/1/keys``) so user-chosen names never have to
+    # round-trip through a file name.  NOT captured: the executable cache
+    # (recompiles on the restoring server — a warmup cost, not state) and
+    # in-flight latency timestamps (latency across a crash is ill-defined;
+    # restored requests re-stamp at restore admission).
+
+    # scalar diagnostics that survive a crash (cumulative counters; the
+    # latency rings and per-device arrays restart empty)
+    _DIAG_SCALARS = (
+        "queries", "steps", "cache_hits", "compiles", "exact_queries",
+        "sampled_queries", "kernel_queries", "queue_latency_s",
+        "e2e_latency_s", "sigma_deferrals", "deadline_promotions",
+        "filter_s", "filter_build_s", "filter_builds", "filter_cache_hits",
+        "shuffled_bytes_saved", "kernel_gather_bytes",
+        "dist_shuffled_tuple_bytes", "dist_dropped_tuples",
+        "dist_wire_bytes_model", "max_batch")
+
+    @staticmethod
+    def _req_meta(req: JoinRequest) -> dict:
+        return {"dataset": req.dataset, "budget": list(req.budget),
+                "agg": req.agg, "expr": req.expr, "query_id": req.query_id,
+                "seed": req.seed, "fp_rate": req.fp_rate,
+                "max_strata": req.max_strata, "b_max": req.b_max,
+                "dedup": req.dedup, "use_kernels": req.use_kernels,
+                "serve_mode": req.serve_mode, "filter_seed": req.filter_seed,
+                "overlap_hint": req.overlap_hint, "stream": req.stream,
+                "window_id": req.window_id,
+                "n_rels": len(req.rels) if req.rels is not None else 0,
+                "n_words": 0 if req._words is None else len(req._words)}
+
+    @staticmethod
+    def _rel_arrays(flat: dict, prefix: str, r: Relation) -> None:
+        flat[f"{prefix}/keys"] = r.keys
+        flat[f"{prefix}/values"] = r.values
+        flat[f"{prefix}/valid"] = r.valid
+
+    def _rel_restore(self, flat: dict, prefix: str) -> Relation:
+        r = Relation(jnp.asarray(flat[f"{prefix}/keys"]),
+                     jnp.asarray(flat[f"{prefix}/values"]),
+                     jnp.asarray(flat[f"{prefix}/valid"]))
+        if self.mesh is not None:
+            r = shard_to_mesh(r, self.mesh, self.join_axes)
+        return r
+
+    def snapshot_state(self) -> tuple[dict, dict]:
+        """Capture the full serving state as ``(flat arrays, meta)``.
+
+        Feed the pair to :func:`repro.runtime.checkpoint.save_checkpoint`
+        (``tree=flat``, ``extra=meta``); the inverse is ``load_checkpoint``
+        + :meth:`restore_state`.  The capture is synchronous with respect to
+        engine mutation — call between steps (the async tier snapshots on
+        its loop thread under the engine lock)."""
+        flat: dict = {}
+        meta: dict = {}
+        ds_meta = []
+        for di, (name, rels) in enumerate(self.datasets.items()):
+            for i, r in enumerate(rels):
+                self._rel_arrays(flat, f"ds/{di}/{i}", r)
+            ds_meta.append({"name": name, "n": len(rels),
+                            "fps": self._dataset_fps[name],
+                            "overlap": self._dataset_overlap.get(name)})
+        meta["datasets"] = ds_meta
+        fw_keys = []
+        for j, (key, words) in enumerate(self._filter_words.items()):
+            fw_keys.append(list(key))            # [fp, num_blocks, seed]
+            flat[f"fw/{j}"] = words
+        meta["filter_cache"] = fw_keys           # in LRU order
+        meta["sigma"] = {q: {str(k): float(v) for k, v in t.items()}
+                         for q, t in self.sigma.table.items()}
+        q_meta = []
+        for j, req in enumerate(self.queue):
+            m = self._req_meta(req)
+            if req.dataset is None:              # inline rels: save arrays
+                for i, r in enumerate(req.rels):
+                    self._rel_arrays(flat, f"q/{j}/rels/{i}", r)
+            if req._words is not None:           # pre-merged window words
+                for i, w in enumerate(req._words):
+                    flat[f"q/{j}/words/{i}"] = w
+            q_meta.append(m)
+        meta["queue"] = q_meta
+        meta["diag"] = {f: getattr(self.diagnostics, f)
+                        for f in self._DIAG_SCALARS}
+        return flat, meta
+
+    def restore_state(self, flat: dict, meta: dict) -> list[JoinRequest]:
+        """Merge a snapshot into this engine; returns the re-queued requests.
+
+        Merge semantics (not replace): restoring into a fresh engine is a
+        plain restore, restoring into a live one ADOPTS the snapshot's
+        tenants — the failover path, where a successor absorbs a dead
+        replica's datasets, filter words, sigma entries (overwritten per
+        query_id, continuing each sigma sequence exactly) and queued
+        requests (appended in saved order, so same-``query_id`` FIFO — the
+        only order sigma feedback observes — is preserved).  Served-but-
+        undrained results are NOT part of a snapshot: their futures resolved
+        at completion time, before any crash this snapshot survives."""
+        for di, d in enumerate(meta.get("datasets", [])):
+            rels = [self._rel_restore(flat, f"ds/{di}/{i}")
+                    for i in range(d["n"])]
+            self.datasets[d["name"]] = rels
+            self._dataset_fps[d["name"]] = list(d["fps"])
+            if d["overlap"] is not None:
+                self._dataset_overlap[d["name"]] = d["overlap"]
+        for j, key in enumerate(meta.get("filter_cache", [])):
+            fp, num_blocks, seed = key
+            self._filter_words[(fp, int(num_blocks), int(seed))] = \
+                jnp.asarray(flat[f"fw/{j}"])
+        while len(self._filter_words) > self.filter_cache_entries:
+            self._filter_words.popitem(last=False)
+        for q, t in meta.get("sigma", {}).items():
+            self.sigma.table[q] = {int(k): float(v) for k, v in t.items()}
+        restored = []
+        for j, m in enumerate(meta.get("queue", [])):
+            if m["dataset"] is None:
+                rels = [self._rel_restore(flat, f"q/{j}/rels/{i}")
+                        for i in range(m["n_rels"])]
+            else:
+                rels = None
+            req = JoinRequest(
+                rels=rels, dataset=m["dataset"],
+                budget=QueryBudget(*m["budget"]), agg=m["agg"],
+                expr=m["expr"], query_id=m["query_id"], seed=m["seed"],
+                fp_rate=m["fp_rate"], max_strata=m["max_strata"],
+                b_max=m["b_max"], dedup=m["dedup"],
+                use_kernels=m["use_kernels"], serve_mode=m["serve_mode"],
+                filter_seed=m["filter_seed"], overlap_hint=m["overlap_hint"],
+                stream=m["stream"], window_id=m["window_id"])
+            if m["n_words"]:
+                req._words = [jnp.asarray(flat[f"q/{j}/words/{i}"])
+                              for i in range(m["n_words"])]
+            self.submit(req)
+            restored.append(req)
+        for f, v in meta.get("diag", {}).items():
+            if f == "max_batch":
+                self.diagnostics.max_batch = max(self.diagnostics.max_batch,
+                                                 v)
+            else:
+                setattr(self.diagnostics, f,
+                        getattr(self.diagnostics, f) + v)
+        return restored
+
     # -- execution paths ----------------------------------------------------
 
     def _kernel_gather(self, arrays) -> list:

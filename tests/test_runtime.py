@@ -13,8 +13,8 @@ import pytest
 from repro.data.pipeline import lm_batch
 from repro.models import ARCHS, Model
 from repro.optim.compress import compress_int8, decompress_int8
-from repro.runtime.checkpoint import (latest_step, restore_checkpoint,
-                                      save_checkpoint)
+from repro.runtime.checkpoint import (CheckpointCorruptError, latest_step,
+                                      restore_checkpoint, save_checkpoint)
 from repro.runtime.fault import (Heartbeat, StragglerMonitor, elastic_restore,
                                  guarded_step)
 from repro.runtime.train import make_train_step, train_state_init
@@ -73,7 +73,7 @@ def test_checkpoint_checksum_guard(tmp_path):
     a = np.load(d / target)
     a = a + 1.0
     np.save(d / target, a)
-    with pytest.raises(AssertionError, match="checksum"):
+    with pytest.raises(CheckpointCorruptError, match="checksum"):
         restore_checkpoint(str(tmp_path), 1, state)
 
 
