@@ -35,6 +35,14 @@ asserted, async q/s >= step loop, and async queue-latency p95 STRICTLY
 below it.  Writes ``BENCH_async.json``.  ``REPRO_TRACE_QUERIES`` scales
 the trace (smoke default 48 in CI, 1024 full; set it to 1_000_000 for a
 million-query soak).
+
+``--plans`` runs the query-plan regression gate: a 2-node plan (2-way
+stage + fused 3-way stage) served through ``JoinServer.submit_plan`` must
+be bit-identical per node to the composed direct ``approx_join`` calls,
+beat them on q/s with zero recompiles after warmup and one plan compile
+(cache hits after), and the compiled byte model must show the cascaded
+Bloom-intersection pushdown strictly reducing modeled shuffle bytes vs a
+left-deep binary join tree — all asserted — writing ``BENCH_plan.json``.
 """
 
 from __future__ import annotations
@@ -441,6 +449,118 @@ def run_kernels() -> list[dict]:
     ]
 
 
+def run_plans() -> list[dict]:
+    """Query-plan serving gate: compiled multi-way plans vs composed calls.
+
+    One 2-node plan (a 2-way stage plus a fused 3-way stage referencing it)
+    is served two ways over the same id-cycled stream: composed direct
+    ``approx_join`` calls per node, and ``JoinServer.submit_plan`` batching
+    node queries through the warmed executables.  Asserted: (a) the
+    compiled byte model shows the cascaded-intersection pushdown strictly
+    reducing modeled shuffle bytes vs the left-deep binary tree on the
+    3-way node, (b) one plan compile + cache hits for every resubmission,
+    (c) ZERO executable recompiles after warmup, (d) per-node bit-identity
+    of a served plan vs the composed direct calls, (e) the batched plan
+    path beats the composed driver loop on q/s.
+    """
+    from repro.core.plan import Plan, PlanNode
+
+    a, b, c = overlapping_relations([N, N, N], 0.1, seed=7)
+    server = JoinServer(batch_slots=SLOTS)
+    for name, rel in zip("abc", (a, b, c)):
+        server.register_dataset(name, [rel])
+    plan = Plan((
+        PlanNode("ab", ("a", "b"), budget=QueryBudget(error=0.5),
+                 max_strata=MAX_STRATA, b_max=B_MAX),
+        PlanNode("abc", ("ab", "c"), budget=QueryBudget(error=0.5),
+                 max_strata=MAX_STRATA, b_max=B_MAX),
+    ))
+
+    # --- pushdown byte model: the point of fusing to one n-way stage ------
+    compiled = server.compile_plan(plan)
+    m3 = compiled.bytes_model["abc"]
+    assert m3["bytes_pushdown"] < m3["bytes_binary"], m3
+    assert m3["reduction_x"] > 1.0, m3
+    assert compiled.bytes_model["ab"]["reduction_x"] == 1.0  # 2-way: equal
+
+    plans = SLOTS * ROUNDS
+    composed = (("ab", [a, b]), ("abc", [a, b, c]))
+
+    # --- composed-driver baseline: one approx_join per node per plan ------
+    reg = SigmaRegistry()
+    for name, rels in composed:          # warm round off the clock
+        approx_join(rels, QueryBudget(error=0.5), max_strata=MAX_STRATA,
+                    b_max=B_MAX, seed=90, sigma_registry=reg,
+                    query_id=f"warm/{name}")
+    t0 = time.perf_counter()
+    for q in range(plans):
+        for name, rels in composed:
+            approx_join(rels, QueryBudget(error=0.5), max_strata=MAX_STRATA,
+                        b_max=B_MAX, seed=100 + q, sigma_registry=reg,
+                        query_id=f"p{q % SLOTS}/{name}")
+    direct_s = time.perf_counter() - t0
+    direct_n = plans * len(composed)
+
+    # --- plan server: warmup (pilot + sigma rounds), then the timed phase -
+    for r in range(2):
+        for q in range(SLOTS):
+            server.submit_plan(plan, query_id=f"p{q % SLOTS}",
+                               seed=100 + SLOTS * r + q)
+        server.run()
+    warm = server.diagnostics.snapshot()
+    server.diagnostics.reset_latencies()
+
+    for q in range(plans):
+        server.submit_plan(plan, query_id=f"p{q % SLOTS}",
+                           seed=200 + q)
+    t0 = time.perf_counter()
+    server.run()
+    serve_s = time.perf_counter() - t0
+    d = server.diagnostics
+    recompiles = d.compiles - warm["compiles"]
+    assert recompiles == 0, \
+        f"plan stages recompiled after warmup: {recompiles}"
+    served = d.queries - warm["queries"]
+
+    # --- per-node bit-identity of one served plan vs the composed calls ---
+    handle = server.submit_plan(plan, query_id="bit", seed=993)
+    server.run()
+    assert handle.done
+    for name, rels in composed:
+        direct = approx_join(rels, QueryBudget(error=0.5),
+                             max_strata=MAX_STRATA, b_max=B_MAX, seed=993,
+                             query_id=f"bit/{name}")
+        got = handle.results()[name]
+        assert (float(got.estimate) == float(direct.estimate)
+                and float(got.error_bound) == float(direct.error_bound)
+                and float(got.count) == float(direct.count)), \
+            f"plan node {name} diverged from the composed direct call"
+
+    # one compile for the plan signature; every resubmission was a cache hit
+    assert d.plan_compiles == 1, d.plan_compiles
+    assert d.plan_cache_hits == 2 * SLOTS + plans + 1, d.plan_cache_hits
+
+    direct_qps = direct_n / direct_s
+    serve_qps = served / serve_s
+    assert serve_qps > direct_qps, \
+        f"plan serving lost to composed driver: {serve_qps} <= {direct_qps}"
+    return [
+        row("plan", mode="composed-direct", queries=direct_n,
+            seconds=round(direct_s, 3), qps=round(direct_qps, 2)),
+        row("plan", mode="server", queries=served,
+            seconds=round(serve_s, 3), qps=round(serve_qps, 2),
+            recompiles_after_warmup=recompiles,
+            plan_compiles=d.plan_compiles,
+            plan_cache_hits=d.plan_cache_hits, max_batch=d.max_batch),
+        row("plan", mode="pushdown-model", n=m3["n"],
+            bytes_pushdown=m3["bytes_pushdown"],
+            bytes_binary=m3["bytes_binary"],
+            reduction_x=round(m3["reduction_x"], 3),
+            overlap=round(m3["overlap"], 4)),
+        row("plan", mode="speedup", x=round(serve_qps / direct_qps, 2)),
+    ]
+
+
 def _run_distributed_leg(devices: int,
                          serve_mode: str = "exact-parity") -> dict:
     """Serve one dataset-handle workload on a ``devices``-wide mesh."""
@@ -563,6 +683,17 @@ def main() -> None:
             json.dump(arows, fh, indent=1)
         print("wrote BENCH_async.json")
         print_rows(arows)
+        return
+    if "--plans" in sys.argv:
+        # query-plan regression gate: compiled plans must be bit-identical
+        # to the composed driver calls, beat them on q/s with zero
+        # recompiles, and the cascaded pushdown must strictly reduce
+        # modeled shuffle bytes — all asserted in run_plans
+        prows = run_plans()
+        with open("BENCH_plan.json", "w") as fh:
+            json.dump(prows, fh, indent=1)
+        print("wrote BENCH_plan.json")
+        print_rows(prows)
         return
     if "--kernels" in sys.argv:
         # kernel-path regression gate: batched Pallas serving must beat the

@@ -8,6 +8,7 @@ Public surface:
   cost         — query-budget cost functions + sigma feedback (§3.2)
   budget       — WITHIN/ERROR query budget interface (§2)
   join         — single-device approx_join orchestrator
+  plan         — query-plan IR: multi-way join DAGs compiled to fused stages
   distributed  — shard_map SPMD pipeline over the mesh
   window       — incremental sub-window layer for streaming joins
   baselines    — Spark native/repartition/broadcast + pre/post-join sampling
@@ -27,6 +28,8 @@ from repro.core.estimators import (Estimate, StratumStats, accuracy_loss,
                                    clt_avg, clt_count, clt_sum,
                                    horvitz_thompson_sum, t_quantile)
 from repro.core.join import JoinResult, approx_join
+from repro.core.plan import (CompiledPlan, Plan, PlanNode, compile_plan,
+                             node_bytes_model)
 from repro.core.relation import Relation, relation
 from repro.core.sampling import (Reservoir, Strata, build_strata,
                                  reservoir_empty, reservoir_extend,

@@ -137,10 +137,33 @@ def intersect(a: BloomFilter, b: BloomFilter) -> BloomFilter:
 
 
 def intersect_all(filters: list[BloomFilter]) -> BloomFilter:
-    out = filters[0]
-    for f in filters[1:]:
-        out = intersect(out, f)
-    return out
+    """AND-merge n dataset filters into the join filter (§3.1, Alg. 1).
+
+    Validates that the filters agree before merging: intersecting filters
+    with different geometry or hash seeds silently returns garbage (the AND
+    of unrelated bit patterns).  Word shapes are static and always checked;
+    seeds are compared only when both are concrete Python ints — under
+    jit/vmap the seed is a tracer (one seed per batch slot) and equality
+    cannot be evaluated at trace time, which is exactly the case where the
+    caller passes the *same* seed object to every filter anyway.
+    """
+    filters = list(filters)
+    if not filters:
+        raise ValueError("intersect_all: need at least one filter")
+    first = filters[0]
+    words = first.words
+    for i, f in enumerate(filters[1:], start=1):
+        if f.words.shape != first.words.shape:
+            raise ValueError(
+                f"intersect_all: filter {i} words shape {f.words.shape} != "
+                f"filter 0 shape {first.words.shape} (num_blocks mismatch)")
+        if (isinstance(f.seed, int) and isinstance(first.seed, int)
+                and f.seed != first.seed):
+            raise ValueError(
+                f"intersect_all: filter {i} seed {f.seed} != filter 0 seed "
+                f"{first.seed} — filters hash incompatibly")
+        words = words & f.words
+    return BloomFilter(words, first.seed)
 
 
 def _unpack(words: jnp.ndarray) -> jnp.ndarray:

@@ -317,12 +317,13 @@ def dist_prepare_stage(rels: Sequence[Relation], num_blocks: int,
             filter_words = [
                 or_reduce(bloom.build(r.keys, r.valid, num_blocks, seed).words,
                           axes) for r in rels]
-        words = filter_words[0]
-        for w in filter_words[1:]:
-            words = words & w
-        jf = bloom.BloomFilter(words, seed)
+        jf = bloom.intersect_all(
+            [bloom.BloomFilter(w, seed) for w in filter_words])
         rels = [Relation(r.keys, r.values,
                          r.valid & bloom.contains(jf, r.keys)) for r in rels]
+        # all-gather restatement of the §3.1 (n + 1) filter-exchange model
+        # (see core.join.filter_exchange_bytes): each of the n + 1 logical
+        # filter transfers costs (k - 1) device hops on a k-device mesh
         fbytes = jnp.asarray(num_blocks * bloom.WORDS_PER_BLOCK * 4
                              * (k - 1) * (n_rels + 1), jnp.float32)
     else:

@@ -39,6 +39,21 @@ from repro.core.sampling import (SampleResult, Strata, build_strata,
 TUPLE_BYTES = 8  # uint32 key + float32 value
 
 
+def filter_exchange_bytes(n: int, fbytes) -> jnp.ndarray:
+    """§3.1 filter-exchange transfer model: bytes moved to build + ship the
+    join filter for an n-way join.
+
+    The n per-dataset filters travel to the merge site (n transfers) and the
+    AND-merged join filter is broadcast back to the workers; as in Spark's
+    torrent broadcast the paper charges the broadcast once, not per-worker —
+    hence (n + 1) filter-sized transfers for every n >= 2.  The distributed
+    engine's all-gather merge (``distributed.py``) restates the same model as
+    ``(k - 1) * (n + 1)`` per-device transfers on a k-device mesh: each of
+    the n + 1 logical transfers costs (k - 1) device hops.
+    """
+    return fbytes * (n + 1)
+
+
 class JoinDiagnostics(NamedTuple):
     total_counts: jnp.ndarray       # [n] tuples per input
     live_counts: jnp.ndarray        # [n] tuples surviving the join filter
@@ -127,16 +142,12 @@ def prepare_stage(rels: Sequence[Relation], num_blocks: int, max_strata: int,
                   seed) -> PrepareOut:
     """Filter build/AND/probe, sort, group-by — one jit/vmap-friendly pass.
 
-    ``seed`` may be a traced array (per-query seeds batch under vmap), so the
-    filter AND happens on the packed words directly rather than through
-    :func:`bloom.intersect_all`, whose seed-equality assert cannot run on
-    tracers.  The arithmetic is identical.
+    ``seed`` may be a traced array (per-query seeds batch under vmap) —
+    :func:`bloom.intersect_all` checks seed equality only on concrete ints,
+    so the cascaded AND-merge routes through it on tracers too.
     """
     filters = [bloom.build(r.keys, r.valid, num_blocks, seed) for r in rels]
-    words = filters[0].words
-    for f in filters[1:]:
-        words = words & f.words
-    join_filter = bloom.BloomFilter(words, seed)
+    join_filter = bloom.intersect_all(filters)
     return _prepare_tail(filter_relations(rels, join_filter), rels,
                          max_strata)
 
@@ -151,10 +162,13 @@ def prepare_stage_pre(rels: Sequence[Relation], filter_words: jnp.ndarray,
     downstream of the build is identical to :func:`prepare_stage`, so the
     results are bit-identical to building from scratch.
     """
-    words = filter_words[0]
-    for i in range(1, filter_words.shape[0]):
-        words = words & filter_words[i]
-    join_filter = bloom.BloomFilter(words, seed)
+    if filter_words.shape[0] != len(rels):
+        raise ValueError(
+            f"prepare_stage_pre: {filter_words.shape[0]} prebuilt filters "
+            f"for {len(rels)} inputs")
+    join_filter = bloom.intersect_all(
+        [bloom.BloomFilter(filter_words[i], seed)
+         for i in range(filter_words.shape[0])])
     return _prepare_tail(filter_relations(rels, join_filter), rels,
                          max_strata)
 
@@ -176,15 +190,17 @@ def prepare_stage_kernels(rels: Sequence[Relation], num_blocks: int,
     """
     from repro.kernels import ops as kops
     if filter_words is None:
-        words = kops.build_filter(rels[0].keys, rels[0].valid, num_blocks,
-                                  seed, interpret=interpret).words
-        for r in rels[1:]:
-            words = words & kops.build_filter(r.keys, r.valid, num_blocks,
-                                              seed, interpret=interpret).words
+        words = bloom.intersect_all(
+            [kops.build_filter(r.keys, r.valid, num_blocks, seed,
+                               interpret=interpret) for r in rels]).words
     else:
-        words = filter_words[0]
-        for i in range(1, filter_words.shape[0]):
-            words = words & filter_words[i]
+        if filter_words.shape[0] != len(rels):
+            raise ValueError(
+                f"prepare_stage_kernels: {filter_words.shape[0]} prebuilt "
+                f"filters for {len(rels)} inputs")
+        words = bloom.intersect_all(
+            [bloom.BloomFilter(filter_words[i], seed)
+             for i in range(filter_words.shape[0])]).words
     live = [Relation(r.keys, r.values,
                      r.valid & kops.probe_filter(words, r.keys, seed,
                                                  interpret=interpret))
@@ -208,9 +224,13 @@ def prepare_stage_kernels_batched(rels: Sequence[Relation],
     slot is bit-identical to :func:`prepare_stage_kernels` on its own.
     """
     from repro.kernels import ops as kops
-    jwords = filter_words[:, 0]
-    for i in range(1, filter_words.shape[1]):
-        jwords = jwords & filter_words[:, i]
+    if filter_words.shape[1] != len(rels):
+        raise ValueError(
+            f"prepare_stage_kernels_batched: {filter_words.shape[1]} "
+            f"prebuilt filters for {len(rels)} inputs")
+    jwords = bloom.intersect_all(
+        [bloom.BloomFilter(filter_words[:, i], seeds)
+         for i in range(filter_words.shape[1])]).words
     live = [Relation(r.keys, r.values,
                      r.valid & kops.probe_filter_batched(
                          jwords, r.keys, seeds, interpret=interpret))
@@ -399,7 +419,10 @@ def approx_join(rels: Sequence[Relation],
     f_fn, exact_fn = EXPRS[expr] if f is None else (f, None)
     n = len(rels)
     max_n = max(r.capacity for r in rels)
-    S = max_strata or rels[0].capacity
+    # size the strata grid from the LARGEST input: keyed on rels[0] alone, a
+    # join whose later relation is bigger under-sizes S and silently inflates
+    # strata_overflow (the overflowing keys fall out of the sample frame)
+    S = max_strata or max_n
 
     # --- stage 1: filtering (timed: feeds d_dt in the latency cost fn) ---
     t0 = time.perf_counter()
@@ -424,7 +447,7 @@ def approx_join(rels: Sequence[Relation],
         total_counts=total_counts, live_counts=live_counts,
         overlap_fraction=overlap, filter_bytes=fbytes,
         shuffled_bytes_filtered=jnp.sum(live_counts) * TUPLE_BYTES
-        + fbytes * (n + 1),
+        + filter_exchange_bytes(n, fbytes),
         shuffled_bytes_repartition=jnp.sum(total_counts) * TUPLE_BYTES,
         num_strata=strata.num_strata, strata_overflow=strata.overflow,
         total_population=total_pop, d_filter_s=d_filter,

@@ -212,6 +212,22 @@ class AsyncJoinServer:
             return futs
         return self.call(_push).result()
 
+    def submit_plan(self, plan, *, query_id: str = "plan0",
+                    **kw) -> dict:
+        """Submit a query plan on the loop thread; returns one future per
+        plan node (node name -> future resolving to the served request).
+        Node requests share the ``query_id`` tenant prefix, so a front door
+        keeps (or steals, or fails over) a plan whole."""
+        def _submit():
+            handle = self.engine.submit_plan(plan, query_id=query_id, **kw)
+            futs = {}
+            for name, req in handle.requests.items():
+                f: Future = Future()
+                req._future = f
+                futs[name] = f
+            return futs
+        return self.call(_submit).result()
+
     def backlog(self) -> int:
         """Pending request count (ingress ring + engine queue)."""
         return len(self._ingress) + len(self.engine.queue)
@@ -560,6 +576,15 @@ class AsyncJoinFrontDoor:
             self.maybe_failover()
             rep = self._route(name)
         return rep.push_by_name(name, rels)
+
+    def submit_plan(self, plan, *, query_id: str = "plan0", **kw) -> dict:
+        """Route a whole plan to its tenant's replica (the plan id IS the
+        tenant, and every node's query id shares it — one plan never splits
+        across replicas); returns node name -> future."""
+        with self._alock:
+            self.maybe_failover()
+            rep = self._route(tenant_of(query_id))
+        return rep.submit_plan(plan, query_id=query_id, **kw)
 
     def open_stream(self, name: str, spec, **kw):
         """Open a streaming session on the tenant's replica; returns

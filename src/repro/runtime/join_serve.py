@@ -114,9 +114,11 @@ from repro.core.distributed import (make_serve_exact, make_serve_exact_psum,
                                     planned_bucket_cap)
 from repro.core.estimators import SumParts
 from repro.core.join import (EXPRS, TUPLE_BYTES, JoinDiagnostics, JoinResult,
-                             decide_sample_sizes, exact_stage, measured_sigma,
+                             decide_sample_sizes, exact_stage,
+                             filter_exchange_bytes, measured_sigma,
                              prepare_stage_kernels_batched, prepare_stage_pre,
                              sample_stage, sample_stage_kernels_batched)
+from repro.core.plan import CompiledPlan, Plan, compile_plan
 from repro.core.relation import (Relation, bucket_capacity, bucket_to_pow2,
                                  fingerprint, shard_to_mesh)
 
@@ -193,6 +195,11 @@ class JoinRequest:
 
     rels: Optional[Sequence[Relation]] = None
     dataset: Optional[str] = None
+    # multi-dataset handle (plan-node requests): the fused stage joins the
+    # concatenation of the named datasets' relation lists, each resolved
+    # through the same fingerprint path as a single-dataset handle — so a
+    # table shared by several plan nodes builds its filter words once
+    datasets: Optional[Sequence[str]] = None
     budget: QueryBudget = QueryBudget()
     agg: str = "sum"
     expr: str = "sum"
@@ -215,6 +222,12 @@ class JoinRequest:
     # streaming metadata (set by StreamJoinSession)
     stream: Optional[str] = None
     window_id: Optional[int] = None
+    # plan metadata (set by submit_plan): the owning plan's id and this
+    # request's node name within it — restore_state regroups requests
+    # carrying these into live PlanHandles, so a failover never drops an
+    # in-flight plan
+    plan: Optional[str] = None
+    plan_node: Optional[str] = None
     # filled by the server
     result: Optional[JoinResult] = None
     done: bool = False
@@ -241,6 +254,31 @@ class JoinRequest:
 
 
 @dataclass
+class PlanHandle:
+    """An in-flight plan: one engine request per plan node.
+
+    Node requests ride the normal queue (their query ids are
+    ``'<plan_id>/<node>'``, so the whole plan is one tenant to the front
+    door) and the handle is just the grouping — the engine tracks live
+    handles in ``JoinServer.plans`` and drops a handle once every node
+    finished, and ``restore_state`` rebuilds handles from the requests'
+    plan metadata after a failover.
+    """
+
+    plan_id: str
+    requests: dict = field(default_factory=dict)   # node name -> JoinRequest
+
+    @property
+    def done(self) -> bool:
+        return all(r.done or r.shed for r in self.requests.values())
+
+    def results(self) -> dict:
+        """node name -> JoinResult (finished nodes only)."""
+        return {name: r.result for name, r in self.requests.items()
+                if r.done and r.result is not None}
+
+
+@dataclass
 class ServerDiagnostics:
     """Server-level counters (cumulative since construction)."""
 
@@ -262,6 +300,8 @@ class ServerDiagnostics:
     # tenant -> (queue ring, e2e ring), same bound: a front door reading
     # one replica snapshot can attribute a latency regression to a tenant
     tenant_latencies: dict = field(default_factory=dict, repr=False)
+    plan_compiles: int = 0          # compiled-plan cache misses
+    plan_cache_hits: int = 0        # compiled-plan cache reuses
     sigma_deferrals: int = 0        # same-id repeats pushed to the next step
     deadline_promotions: int = 0    # backlog steps served out of FIFO order
     filter_s: float = 0.0           # summed batch filter-stage wall time
@@ -458,6 +498,12 @@ class JoinServer:
         self._dataset_fps: dict[str, list[str]] = {}
         self._dataset_overlap: dict[str, float] = {}
         self._exec_cache: dict = {}
+        # compiled plans, cached by plan signature the way shape classes key
+        # the executable cache: resubmitting a plan shape skips the
+        # flatten/validate/cost pass entirely (per-node stage executables
+        # land in _exec_cache through the normal shape-class route)
+        self._plan_cache: dict = {}
+        self.plans: dict[str, PlanHandle] = {}   # in-flight plan handles
         # LRU of (fingerprint, num_blocks, seed) -> words: bounded so a
         # long-running server with ever-fresh seeds cannot accumulate
         # device-resident filter words without limit
@@ -513,10 +559,19 @@ class JoinServer:
 
     def submit(self, req: JoinRequest) -> JoinRequest:
         if req.rels is None:
-            if req.dataset is None:
+            if req.datasets is not None:
+                for name in req.datasets:
+                    if name not in self.datasets:
+                        raise ValueError(f"unknown dataset {name!r}")
+                req.rels = [r for name in req.datasets
+                            for r in self.datasets[name]]
+                req._fps = [fp for name in req.datasets
+                            for fp in self._dataset_fps[name]]
+            elif req.dataset is not None:
+                req.rels = self.datasets[req.dataset]
+                req._fps = self._dataset_fps[req.dataset]
+            else:
                 raise ValueError("JoinRequest needs rels or a dataset handle")
-            req.rels = self.datasets[req.dataset]
-            req._fps = self._dataset_fps[req.dataset]
         else:
             # inline relations are NOT fingerprinted: hashing every ad-hoc
             # submission would put a device_get + sha1 of the whole key set
@@ -532,7 +587,10 @@ class JoinServer:
         if req.agg not in AGGS:
             raise ValueError(f"unknown agg {req.agg!r}")
         if req.max_strata is None:
-            req.max_strata = req.rels[0].capacity
+            # size from the LARGEST input (mirrors approx_join): the old
+            # rels[0] default under-sized the strata grid whenever a later
+            # relation was bigger, silently inflating strata_overflow
+            req.max_strata = max(r.capacity for r in req.rels)
         if req.b_max is None:
             # approx_join's b_max=None adaptive grid sizes the draw capacity
             # from data-dependent peak b_i — incompatible with a pre-keyed
@@ -558,6 +616,59 @@ class JoinServer:
             req._ingest_t = req._submit_t
         self.queue.append(req)
         return req
+
+    # -- query plans --------------------------------------------------------
+
+    def compile_plan(self, plan: Plan) -> CompiledPlan:
+        """Compile (or fetch) a plan against this server's datasets.
+
+        Flattening, validation, and the pushdown-vs-binary byte model run
+        once per plan signature; repeats are cache hits.  Registering new
+        data under a name already baked into a cached plan is fine — the
+        compiled form only holds dataset *names*; relations resolve at
+        submit time through the normal handle path.
+        """
+        key = plan.signature()
+        compiled = self._plan_cache.get(key)
+        if compiled is None:
+            compiled = compile_plan(plan, self.datasets)
+            self._plan_cache[key] = compiled
+            self.diagnostics.plan_compiles += 1
+        else:
+            self.diagnostics.plan_cache_hits += 1
+        return compiled
+
+    def submit_plan(self, plan: Plan, *, query_id: str = "plan0",
+                    seed: int = 0, serve_mode: Optional[str] = None,
+                    use_kernels: Optional[bool] = None) -> PlanHandle:
+        """Submit every node of a plan as one engine request each.
+
+        Node requests are ordinary queue entries (query id
+        ``'<query_id>/<node>'``), so each node's result is bit-identical to
+        a direct ``approx_join`` over its flattened leaf relations with the
+        node's own budget — the compiler changes *what* is submitted, never
+        how it executes.  The compiled byte model's live fraction seeds each
+        request's ``overlap_hint`` (psum bucket planning).
+        """
+        compiled = self.compile_plan(plan)
+        handle = PlanHandle(query_id)
+        for cn in compiled.nodes:
+            node = cn.node
+            model = compiled.bytes_model.get(node.name)
+            req = JoinRequest(
+                datasets=cn.datasets, budget=node.budget, agg=node.agg,
+                expr=node.expr, query_id=f"{query_id}/{node.name}",
+                seed=seed, fp_rate=node.fp_rate, max_strata=node.max_strata,
+                b_max=node.b_max, dedup=node.dedup,
+                use_kernels=node.use_kernels if use_kernels is None
+                else use_kernels,
+                serve_mode=serve_mode,
+                overlap_hint=None if model is None else model["overlap"],
+                plan=query_id, plan_node=node.name)
+            self.submit(req)
+            handle.requests[node.name] = req
+        self.plans[query_id] = handle
+        return handle
 
     def _planned_cap(self, req: JoinRequest, mode: str) -> int:
         """Static per-(source, dest) shuffle bucket capacity for this query.
@@ -752,6 +863,10 @@ class JoinServer:
         runs after the result (or the shed flag) is fully populated."""
         if self.on_done is not None:
             self.on_done(req)
+        if req.plan is not None:
+            handle = self.plans.get(req.plan)
+            if handle is not None and handle.done:
+                del self.plans[req.plan]
 
     def run(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):
@@ -779,12 +894,17 @@ class JoinServer:
         "e2e_latency_s", "sigma_deferrals", "deadline_promotions",
         "filter_s", "filter_build_s", "filter_builds", "filter_cache_hits",
         "shuffled_bytes_saved", "kernel_gather_bytes",
+        "plan_compiles", "plan_cache_hits",
         "dist_shuffled_tuple_bytes", "dist_dropped_tuples",
         "dist_wire_bytes_model", "max_batch")
 
     @staticmethod
     def _req_meta(req: JoinRequest) -> dict:
-        return {"dataset": req.dataset, "budget": list(req.budget),
+        return {"dataset": req.dataset,
+                "datasets": None if req.datasets is None
+                else list(req.datasets),
+                "plan": req.plan, "plan_node": req.plan_node,
+                "budget": list(req.budget),
                 "agg": req.agg, "expr": req.expr, "query_id": req.query_id,
                 "seed": req.seed, "fp_rate": req.fp_rate,
                 "max_strata": req.max_strata, "b_max": req.b_max,
@@ -837,7 +957,9 @@ class JoinServer:
         q_meta = []
         for j, req in enumerate(self.queue):
             m = self._req_meta(req)
-            if req.dataset is None:              # inline rels: save arrays
+            # handle requests (single- or multi-dataset) need no arrays: the
+            # datasets themselves are in the snapshot and resolve by name
+            if req.dataset is None and req.datasets is None:
                 for i, r in enumerate(req.rels):
                     self._rel_arrays(flat, f"q/{j}/rels/{i}", r)
             if req._words is not None:           # pre-merged window words
@@ -878,25 +1000,32 @@ class JoinServer:
             self.sigma.table[q] = {int(k): float(v) for k, v in t.items()}
         restored = []
         for j, m in enumerate(meta.get("queue", [])):
-            if m["dataset"] is None:
+            if m["dataset"] is None and not m.get("datasets"):
                 rels = [self._rel_restore(flat, f"q/{j}/rels/{i}")
                         for i in range(m["n_rels"])]
             else:
                 rels = None
             req = JoinRequest(
-                rels=rels, dataset=m["dataset"],
+                rels=rels, dataset=m["dataset"], datasets=m.get("datasets"),
                 budget=QueryBudget(*m["budget"]), agg=m["agg"],
                 expr=m["expr"], query_id=m["query_id"], seed=m["seed"],
                 fp_rate=m["fp_rate"], max_strata=m["max_strata"],
                 b_max=m["b_max"], dedup=m["dedup"],
                 use_kernels=m["use_kernels"], serve_mode=m["serve_mode"],
                 filter_seed=m["filter_seed"], overlap_hint=m["overlap_hint"],
-                stream=m["stream"], window_id=m["window_id"])
+                stream=m["stream"], window_id=m["window_id"],
+                plan=m.get("plan"), plan_node=m.get("plan_node"))
             if m["n_words"]:
                 req._words = [jnp.asarray(flat[f"q/{j}/words/{i}"])
                               for i in range(m["n_words"])]
             self.submit(req)
             restored.append(req)
+            if req.plan is not None:
+                # regroup plan-node requests into a live handle so the
+                # successor tracks (and completes) the adopted plan whole
+                handle = self.plans.setdefault(req.plan,
+                                               PlanHandle(req.plan))
+                handle.requests[req.plan_node] = req
         for f, v in meta.get("diag", {}).items():
             if f == "max_batch":
                 self.diagnostics.max_batch = max(self.diagnostics.max_batch,
@@ -1020,7 +1149,7 @@ class JoinServer:
                 / jnp.maximum(jnp.sum(tot_i), 1),
                 filter_bytes=fbytes,
                 shuffled_bytes_filtered=jnp.sum(live_i) * TUPLE_BYTES
-                + fbytes * (n + 1),
+                + filter_exchange_bytes(n, fbytes),
                 shuffled_bytes_repartition=jnp.sum(tot_i) * TUPLE_BYTES,
                 num_strata=strata_i.num_strata,
                 strata_overflow=strata_i.overflow,

@@ -61,6 +61,7 @@ class GateConfig:
 
     replications: int = 30
     n_rows: int = 2048
+    n_rels: int = 2            # inputs per join (3+ gates multi-way plans)
     keys_per_dataset: int = 256
     overlap: float = 0.25
     pilot_fraction: float = 0.1
@@ -115,9 +116,10 @@ def _workload(cfg: GateConfig, r: int):
     """Replication r's relations + exact ground truth (truth memoized —
     several backends gate over the same seeded workloads)."""
     rels = overlapping_relations(
-        [cfg.n_rows] * 2, cfg.overlap,
+        [cfg.n_rows] * cfg.n_rels, cfg.overlap,
         keys_per_dataset=cfg.keys_per_dataset, seed=cfg.seed + r)
-    key = (cfg.n_rows, cfg.keys_per_dataset, cfg.overlap, cfg.seed + r)
+    key = (cfg.n_rows, cfg.n_rels, cfg.keys_per_dataset, cfg.overlap,
+           cfg.seed + r)
     if key not in _TRUTH_CACHE:
         truth = repartition_join(rels, expr="sum")
         _TRUTH_CACHE[key] = (float(truth.estimate), float(truth.count))

@@ -1,0 +1,415 @@
+"""The query-plan compiler and the engine's multi-way serve paths.
+
+Owned by the async-serving CI leg (8 forced host devices, so the mesh
+parity/gate cases run).  Covers:
+
+* plan IR validation, flattening, and the compiled-plan cache;
+* the ``intersect_all`` typed validation + prebuilt-words shape asserts;
+* the §3.1 ``(n + 1)`` filter-exchange formula at n = 2/3/4;
+* the strata-grid sizing regression (defaults must size from the LARGEST
+  input — previously from ``rels[0]``, driver and server both);
+* 3-way and 4-way joins through the batched server, a mixed 2-way/3-way
+  submission (shape classes must not collide), the async tier, and a
+  2-device mesh (bit-parity with the meshless engine);
+* plan bit-parity with composed direct ``approx_join`` calls, plan
+  survival across ``snapshot_state``/``restore_state``, and the
+  statistical accuracy gate for a 3-way plan at mesh 1 (in-process) and
+  mesh 2/4/8 in both serve modes (slow subprocess).
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from accuracy import GateConfig, run_accuracy_gate
+from repro.core import bloom
+from repro.core.budget import QueryBudget
+from repro.core.join import (TUPLE_BYTES, approx_join, filter_exchange_bytes,
+                             prepare_stage_pre)
+from repro.core.plan import Plan, PlanNode, compile_plan, node_bytes_model
+from repro.core.relation import relation
+from repro.data.synthetic import overlapping_relations
+from repro.runtime.join_serve import JoinRequest, JoinServer
+
+ERR = QueryBudget(error=0.05)
+
+
+def _rels(n, rows=1 << 10, seed=3, overlap=0.25):
+    return overlapping_relations([rows] * n, overlap, seed=seed)
+
+
+def _identical(a, b) -> bool:
+    """Bitwise equality of two JoinResults (scalars + strata grid)."""
+    if a.strata.keys.shape != b.strata.keys.shape:
+        return False
+    return all(bool(jnp.all(getattr(a, f) == getattr(b, f)))
+               for f in ("estimate", "error_bound", "count", "dof")) \
+        and bool(jnp.all(a.strata.keys == b.strata.keys))
+
+
+# -- plan IR ----------------------------------------------------------------
+
+def test_plan_validation():
+    with pytest.raises(ValueError, match="at least one node"):
+        Plan(())
+    with pytest.raises(ValueError, match="duplicate"):
+        Plan((PlanNode("x", ("a", "b")), PlanNode("x", ("a", "b"))))
+    with pytest.raises(ValueError, match="references itself"):
+        Plan((PlanNode("x", ("x", "a")),))
+    with pytest.raises(ValueError, match="no inputs"):
+        PlanNode("x", ())
+    with pytest.raises(ValueError, match="reserved"):
+        PlanNode("a/b", ("a", "b"))
+
+
+def test_compile_rejects_unknown_and_degenerate():
+    a, b = _rels(2)
+    datasets = {"a": [a], "b": [b]}
+    with pytest.raises(ValueError, match="neither an earlier plan node"):
+        compile_plan(Plan((PlanNode("x", ("a", "nope")),)), datasets)
+    # forward references read as (unknown) dataset names: order = topo order
+    with pytest.raises(ValueError, match="neither an earlier plan node"):
+        compile_plan(Plan((PlanNode("x", ("a", "y")),
+                           PlanNode("y", ("a", "b")))), datasets)
+    with pytest.raises(ValueError, match="at least two"):
+        compile_plan(Plan((PlanNode("x", ("a",)),)), datasets)
+
+
+def test_plan_flattening_fuses_leaf_sets():
+    plan = Plan((PlanNode("ab", ("a", "b")),
+                 PlanNode("abc", ("ab", "c")),
+                 PlanNode("deep", ("abc", "ab", "d"))))
+    assert plan.leaf_inputs("ab") == ("a", "b")
+    assert plan.leaf_inputs("abc") == ("a", "b", "c")
+    # recursive expansion, order-preserving dedupe
+    assert plan.leaf_inputs("deep") == ("a", "b", "c", "d")
+
+
+def test_compile_expands_multi_relation_datasets():
+    a, b, c = _rels(3)
+    compiled = compile_plan(Plan((PlanNode("j", ("pair", "c")),)),
+                            {"pair": [a, b], "c": [c]})
+    assert compiled.nodes[0].n_rels == 3
+    assert compiled.bytes_model["j"]["n"] == 3
+
+
+# -- bloom intersect validation ---------------------------------------------
+
+def test_intersect_all_typed_validation():
+    r1, r2 = _rels(2, rows=256)
+    f1 = bloom.build(r1.keys, r1.valid, 8, seed=0)
+    f2 = bloom.build(r2.keys, r2.valid, 8, seed=0)
+    with pytest.raises(ValueError, match="at least one filter"):
+        bloom.intersect_all([])
+    with pytest.raises(ValueError, match="num_blocks mismatch"):
+        bloom.intersect_all([f1, bloom.build(r2.keys, r2.valid, 16, seed=0)])
+    with pytest.raises(ValueError, match="seed"):
+        bloom.intersect_all([f1, bloom.build(r2.keys, r2.valid, 8, seed=9)])
+    merged = bloom.intersect_all([f1, f2])
+    assert bool(jnp.all(merged.words == (f1.words & f2.words)))
+    assert bloom.intersect_all([f1]) is not None
+
+
+def test_prepare_pre_asserts_shape_agreement():
+    rels = _rels(3, rows=256)
+    nb = bloom.num_blocks_for(256, 0.01)
+    words = jnp.stack([bloom.build(r.keys, r.valid, nb, 0).words
+                       for r in rels[:2]])
+    with pytest.raises(ValueError, match="2 prebuilt filters for 3 inputs"):
+        prepare_stage_pre(rels, words, 256, 0)
+
+
+# -- §3.1 filter-exchange formula -------------------------------------------
+
+@pytest.mark.parametrize("n", [2, 3, 4])
+def test_filter_exchange_bytes_nway(n):
+    """Diagnostics must charge live tuples + the (n + 1) filter transfers of
+    §3.1 (n per-dataset filters to the merge site + one broadcast back)."""
+    res = approx_join(_rels(n, rows=512), ERR, seed=2)
+    d = res.diagnostics
+    expect = (int(jnp.sum(d.live_counts)) * TUPLE_BYTES
+              + d.filter_bytes * (n + 1))
+    assert int(d.shuffled_bytes_filtered) == expect
+    assert int(filter_exchange_bytes(n, d.filter_bytes)) \
+        == d.filter_bytes * (n + 1)
+
+
+# -- strata-grid sizing regression (rels[0] -> max) -------------------------
+
+def _asymmetric():
+    rng = np.random.default_rng(0)
+    small = relation(np.arange(512, dtype=np.uint32),
+                     rng.poisson(10, 512).astype(np.float32))
+    big = relation(rng.integers(0, 3000, 4096).astype(np.uint32),
+                   rng.poisson(10, 4096).astype(np.float32))
+    return small, big
+
+
+def test_strata_grid_sized_from_largest_input_driver():
+    """Regression: the default strata grid must equal sizing from the
+    LARGEST input — the old ``rels[0].capacity`` default built a 512-row
+    grid here (the big side's 4096 capacity ignored), so the result was not
+    bit-identical to the explicitly max-sized call."""
+    small, big = _asymmetric()
+    default = approx_join([small, big], ERR, seed=1)
+    explicit = approx_join([small, big], ERR, seed=1, max_strata=4096)
+    assert default.strata.keys.shape == explicit.strata.keys.shape
+    assert _identical(default, explicit)
+    assert int(default.diagnostics.strata_overflow) == 0
+
+
+def test_strata_grid_sized_from_largest_input_server():
+    """Server counterpart: a default-sized request must resolve
+    ``max_strata`` to the largest input's (bucketed) capacity and serve
+    bit-identically to the explicitly max-sized driver call."""
+    small, big = _asymmetric()
+    srv = JoinServer(batch_slots=2)
+    req = srv.submit(JoinRequest(rels=[small, big], budget=ERR, seed=1))
+    srv.run()
+    assert req.max_strata == 4096       # old code: rels[0].capacity == 512
+    explicit = approx_join([small, big], ERR, seed=1, max_strata=4096)
+    assert _identical(req.result, explicit)
+
+
+# -- n-way joins through the server -----------------------------------------
+
+@pytest.mark.parametrize("n", [3, 4])
+def test_nway_served_bit_identical(n):
+    rels = _rels(n)
+    srv = JoinServer(batch_slots=4)
+    req = srv.submit(JoinRequest(rels=rels, budget=ERR, seed=5,
+                                 query_id=f"q{n}"))
+    srv.run()
+    direct = approx_join(rels, ERR, seed=5, query_id=f"q{n}",
+                         max_strata=req.max_strata)
+    assert _identical(req.result, direct)
+
+
+def test_mixed_two_and_three_way_batch():
+    """2-way and 3-way queries submitted together must serve in separate
+    shape classes (one step each), each bit-identical to its direct call —
+    a shape-class collision would fuse mismatched stage programs."""
+    rels3 = _rels(3)
+    srv = JoinServer(batch_slots=4)
+    reqs2 = [srv.submit(JoinRequest(rels=rels3[:2], budget=ERR, seed=s,
+                                    query_id=f"two{s}")) for s in (1, 2)]
+    reqs3 = [srv.submit(JoinRequest(rels=rels3, budget=ERR, seed=s,
+                                    query_id=f"three{s}")) for s in (1, 2)]
+    assert reqs2[0]._class != reqs3[0]._class
+    steps0 = srv.diagnostics.steps
+    srv.run()
+    assert srv.diagnostics.steps - steps0 == 2
+    for req, n in [(r, 2) for r in reqs2] + [(r, 3) for r in reqs3]:
+        direct = approx_join(rels3[:n], ERR, seed=req.seed,
+                             query_id=req.query_id,
+                             max_strata=req.max_strata)
+        assert _identical(req.result, direct), req.query_id
+
+
+# -- plans through the engine -----------------------------------------------
+
+def _abc_server(**kw):
+    srv = JoinServer(batch_slots=4, **kw)
+    for name, r in zip("abcd", _rels(4)):
+        srv.register_dataset(name, [r])
+    return srv
+
+
+_PLAN = Plan((PlanNode("ab", ("a", "b"), budget=ERR),
+              PlanNode("abc", ("ab", "c"), budget=ERR)))
+
+
+def _assert_plan_parity(srv, results, seed, query_id="p0"):
+    """Every node must be bit-identical to the composed direct call over
+    its flattened leaf relations (same seed, same query id)."""
+    for name, leaves in (("ab", ("a", "b")), ("abc", ("a", "b", "c"))):
+        direct_rels = [r for d in leaves for r in srv.datasets[d]]
+        direct = approx_join(direct_rels, ERR, seed=seed,
+                             query_id=f"{query_id}/{name}",
+                             max_strata=max(r.capacity for r in direct_rels))
+        assert _identical(results[name], direct), name
+
+
+def test_plan_served_bit_identical_to_composed_calls():
+    srv = _abc_server()
+    handle = srv.submit_plan(_PLAN, query_id="p0", seed=7)
+    assert set(handle.requests) == {"ab", "abc"}
+    assert "p0" in srv.plans
+    srv.run()
+    assert handle.done
+    assert "p0" not in srv.plans        # completed handles are dropped
+    _assert_plan_parity(srv, handle.results(), seed=7)
+
+
+def test_plan_cache_and_zero_recompiles():
+    srv = _abc_server()
+    h1 = srv.submit_plan(_PLAN, query_id="p1", seed=1)
+    srv.run()
+    assert srv.diagnostics.plan_compiles == 1
+    compiles = srv.diagnostics.compiles
+    h2 = srv.submit_plan(_PLAN, query_id="p2", seed=2)
+    srv.run()
+    assert srv.diagnostics.plan_cache_hits == 1
+    assert srv.diagnostics.compiles == compiles   # warm executables reused
+    assert h1.results().keys() == h2.results().keys()
+
+
+def test_plan_pushdown_model_beats_binary_tree():
+    """The compiled byte model: fusing to one n-way stage with the full
+    cascaded intersection pushed down must beat the left-deep binary tree
+    (which ships intermediates and can only 2-way filter)."""
+    compiled = _abc_server().compile_plan(_PLAN)
+    m2, m3 = compiled.bytes_model["ab"], compiled.bytes_model["abc"]
+    assert m2["reduction_x"] == 1.0               # 2-way: same plan either way
+    assert m3["bytes_pushdown"] < m3["bytes_binary"]
+    assert m3["reduction_x"] > 1.0
+    assert 0.0 < m3["overlap"] <= 1.0
+
+
+def test_plan_survives_snapshot_restore():
+    """A failover never drops an in-flight plan: snapshot with the plan
+    queued, restore into a fresh engine, serve there — handle regrouped,
+    results bit-identical to the original engine's."""
+    src = _abc_server()
+    h_src = src.submit_plan(_PLAN, query_id="pf", seed=9)
+    flat, meta = src.snapshot_state()
+
+    dst = JoinServer(batch_slots=4)
+    restored = dst.restore_state(flat, meta)
+    assert len(restored) == 2
+    assert "pf" in dst.plans
+    h_dst = dst.plans["pf"]
+    assert set(h_dst.requests) == {"ab", "abc"}
+    dst.run()
+    assert h_dst.done and "pf" not in dst.plans
+    src.run()
+    for name in ("ab", "abc"):
+        assert _identical(h_dst.results()[name], h_src.results()[name]), name
+    _assert_plan_parity(dst, h_dst.results(), seed=9, query_id="pf")
+
+
+def test_plan_async_served_bit_identical():
+    from repro.runtime.async_serve import AsyncJoinServer
+    inner = _abc_server()
+    with AsyncJoinServer(inner) as asrv:
+        futs = asrv.submit_plan(_PLAN, query_id="ap", seed=11)
+        results = {name: f.result(timeout=120).result
+                   for name, f in futs.items()}
+    _assert_plan_parity(inner, results, seed=11, query_id="ap")
+
+
+def test_plan_front_door_routes_plan_whole():
+    from repro.runtime.async_serve import AsyncJoinFrontDoor
+    rels = _rels(3)
+    with AsyncJoinFrontDoor(replicas=2) as door:
+        for name, r in zip("abc", rels):
+            door.register_dataset(name, [r])
+        futs = door.submit_plan(_PLAN, query_id="fd", seed=4)
+        served = {name: f.result(timeout=120) for name, f in futs.items()}
+        # one tenant -> one replica: the whole plan landed on one engine
+        owners = [rep for rep in door.replicas
+                  if rep.engine.diagnostics.queries > 0]
+        assert len(owners) == 1
+    assert all(r.done and r.result is not None for r in served.values())
+    direct = approx_join([r for r in rels], ERR, seed=4, query_id="fd/abc",
+                         max_strata=max(r.capacity for r in rels))
+    assert _identical(served["abc"].result, direct)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2, reason="needs >= 2 devices")
+def test_plan_mesh2_bit_identical_to_meshless():
+    """A 3-way plan on a 2-device mesh (exact-parity merge) reproduces the
+    meshless engine float-for-float, node by node."""
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(jax.devices()[:2]), ("data",))
+    srv_mesh = JoinServer(batch_slots=4, mesh=mesh)
+    srv_flat = JoinServer(batch_slots=4)
+    for name, r in zip("abcd", _rels(4)):
+        srv_mesh.register_dataset(name, [r])
+        srv_flat.register_dataset(name, [r])
+    h_mesh = srv_mesh.submit_plan(_PLAN, query_id="m", seed=3)
+    h_flat = srv_flat.submit_plan(_PLAN, query_id="m", seed=3)
+    srv_mesh.run()
+    srv_flat.run()
+    for name in ("ab", "abc"):
+        assert _identical(h_mesh.results()[name], h_flat.results()[name])
+
+
+# -- statistical accuracy gate for plans ------------------------------------
+
+PLAN_CFG = GateConfig(n_rels=3, replications=12)
+PLAN_PSUM_CFG = GateConfig(n_rels=3, replications=12, count_rtol=2e-2)
+
+
+def make_plan_backend(server: JoinServer):
+    """One 3-way single-node plan per replication, served end to end."""
+    def backend(rels, seed):
+        names = []
+        for i, r in enumerate(rels):
+            name = f"rep{seed}_{i}"
+            server.register_dataset(name, [r])
+            names.append(name)
+        plan = Plan((PlanNode(
+            "node", tuple(names),
+            budget=QueryBudget(error=0.5,
+                               pilot_fraction=PLAN_CFG.pilot_fraction),
+            max_strata=PLAN_CFG.max_strata, b_max=PLAN_CFG.b_max),))
+        handle = server.submit_plan(plan, query_id=f"rep{seed}", seed=seed)
+        server.run()
+        res = handle.results()["node"]
+        return (float(res.estimate), float(res.error_bound),
+                float(res.count), res.stats)
+    return backend
+
+
+def test_plan_accuracy_gate_mesh1():
+    rep = run_accuracy_gate(make_plan_backend(JoinServer(batch_slots=1)),
+                            PLAN_CFG)
+    assert rep.passed, rep.summary()
+    assert rep.checked_allocation
+
+
+_MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+import numpy as np
+from jax.sharding import Mesh
+from test_plan import (PLAN_CFG, PLAN_PSUM_CFG, make_plan_backend,
+                       run_accuracy_gate)
+from repro.runtime.join_serve import JoinServer
+
+for d in (2, 4, 8):
+    for mode, cfg in (("exact-parity", PLAN_CFG), ("psum", PLAN_PSUM_CFG)):
+        mesh = Mesh(np.array(jax.devices()[:d]), ("data",))
+        srv = JoinServer(batch_slots=1, mesh=mesh, serve_mode=mode)
+        rep = run_accuracy_gate(make_plan_backend(srv), cfg)
+        print(f"mesh{d} {mode}: {rep.summary()}", flush=True)
+        assert rep.passed, (d, mode, rep.summary())
+        if mode == "exact-parity":
+            assert srv.diagnostics.dist_dropped_tuples == 0.0
+print("PLAN-GATE-OK")
+"""
+
+
+@pytest.mark.slow
+def test_plan_accuracy_gate_mesh_2_4_8():
+    env = dict(os.environ, PYTHONPATH=os.pathsep.join(["src", "tests"]))
+    out = subprocess.run([sys.executable, "-c", _MESH_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "PLAN-GATE-OK" in out.stdout, out.stdout[-2000:]
+
+
+def test_node_bytes_model_two_way_equal():
+    """n = 2 sanity: pushdown and binary models coincide exactly."""
+    m = node_bytes_model(_rels(2, rows=512))
+    assert m["bytes_pushdown"] == m["bytes_binary"]
+    assert m["reduction_x"] == 1.0
