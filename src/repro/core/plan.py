@@ -106,6 +106,22 @@ class Plan:
         """Hashable identity for the engine's compiled-plan cache."""
         return tuple(n.signature() for n in self.nodes)
 
+    def hierarchy(self) -> Dict[str, List[str]]:
+        """Node name -> directly referenced earlier-node names.
+
+        The plan's span hierarchy: the engine's tracer records one query
+        span per node and tags the plan's submit instant with these edges,
+        so trace consumers (``launch/trace_dump.py``) can nest each node's
+        span under the nodes that reference it.  Inputs that resolve as
+        datasets (no earlier node of that name) are leaves and excluded.
+        """
+        earlier: set = set()
+        edges: Dict[str, List[str]] = {}
+        for node in self.nodes:
+            edges[node.name] = [i for i in node.inputs if i in earlier]
+            earlier.add(node.name)
+        return edges
+
     def leaf_inputs(self, name: str) -> Tuple[str, ...]:
         """Flattened, order-preserving leaf dataset set of a node.
 

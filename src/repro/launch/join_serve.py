@@ -34,20 +34,25 @@ from repro.core.cost import CostModel
 from repro.data.synthetic import overlapping_relations
 from repro.runtime.async_serve import AsyncJoinFrontDoor
 from repro.runtime.join_serve import JoinRequest, JoinServer
+from repro.runtime.telemetry import (Tracer, dump_chrome_trace,
+                                     format_reconciliation,
+                                     reconciliation_report)
 
 
 def run(*, tenants: int = 4, queries_per_tenant: int = 8, slots: int = 4,
         base_n: int = 1 << 12, seed: int = 0, mesh_devices: int = 0,
-        serve_mode: str = "exact-parity") -> dict:
+        serve_mode: str = "exact-parity",
+        trace_out: str | None = None) -> dict:
     mesh = None
     if mesh_devices:
         import jax
         import numpy as np
         from jax.sharding import Mesh
         mesh = Mesh(np.array(jax.devices()[:mesh_devices]), ("data",))
+    tracer = Tracer(enabled=True) if trace_out else None
     server = JoinServer(batch_slots=slots,
                         cost_model=CostModel(beta_compute=1e-7, epsilon=1e-3),
-                        mesh=mesh, serve_mode=serve_mode)
+                        mesh=mesh, serve_mode=serve_mode, tracer=tracer)
     budgets = [QueryBudget(error=0.5), QueryBudget(latency_s=0.5),
                QueryBudget()]
     for t in range(tenants):
@@ -89,6 +94,12 @@ def run(*, tenants: int = 4, queries_per_tenant: int = 8, slots: int = 4,
         print(f"  {r.query_id}: estimate={float(r.result.estimate):.1f} "
               f"+-{float(r.result.error_bound):.1f} "
               f"sampled={bool(r.result.diagnostics.sampled)}")
+    if trace_out:
+        recon = server.reconciliation_report()
+        n_ev = dump_chrome_trace(tracer, trace_out, reconciliation=recon)
+        print(f"  trace: {n_ev} events -> {trace_out} (open in "
+              "ui.perfetto.dev or chrome://tracing)")
+        print(format_reconciliation(recon))
     return {"queries": d.queries, "seconds": dt, "qps": qps,
             **d.snapshot()}
 
@@ -98,7 +109,8 @@ def run_async(*, tenants: int = 4, queries_per_tenant: int = 8,
               replicas: int = 2, mesh_devices: int = 0,
               serve_mode: str = "exact-parity",
               checkpoint_dir: str | None = None,
-              kill_after: int = 0) -> dict:
+              kill_after: int = 0,
+              trace_out: str | None = None) -> dict:
     """The same tenant workload through the always-on async tier: replica
     event loops with continuous batching behind a work-stealing front door
     (``runtime/async_serve.py``); submissions return futures immediately.
@@ -124,8 +136,10 @@ def run_async(*, tenants: int = 4, queries_per_tenant: int = 8,
 
     budgets = [QueryBudget(error=0.5), QueryBudget(latency_s=0.5),
                QueryBudget()]
+    tracer = Tracer(enabled=True) if trace_out else None
     with AsyncJoinFrontDoor(replicas=replicas, engine_factory=factory,
-                            checkpoint_dir=checkpoint_dir) as fd:
+                            checkpoint_dir=checkpoint_dir,
+                            tracer=tracer) as fd:
         for t in range(tenants):
             n = base_n << (t % 2)      # two capacity shape classes
             rels = overlapping_relations([n, n], 0.1, seed=seed + t)
@@ -178,6 +192,15 @@ def run_async(*, tenants: int = 4, queries_per_tenant: int = 8,
         print(f"  {r.query_id}: estimate={float(r.result.estimate):.1f} "
               f"+-{float(r.result.error_bound):.1f} "
               f"sampled={bool(r.result.diagnostics.sampled)}")
+    if trace_out:
+        # fleet-level report: the shared tracer holds every replica's
+        # per-query recon records; server-level byte pairs are per-engine,
+        # so the fleet dump aggregates queries only
+        recon = reconciliation_report(tracer.recon)
+        n_ev = dump_chrome_trace(tracer, trace_out, reconciliation=recon)
+        print(f"  trace: {n_ev} events -> {trace_out} (open in "
+              "ui.perfetto.dev or chrome://tracing)")
+        print(format_reconciliation(recon))
     return {"queries": len(reqs), "seconds": dt, "qps": qps, **snap}
 
 
@@ -205,6 +228,11 @@ def main() -> None:
                     help="fault drill (with --async + --checkpoint-dir): "
                          "kill replica0 after N served steps and fail its "
                          "tenants over to a successor")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record per-query span trees and write a Chrome "
+                         "trace-event JSON (perfetto-viewable) plus a "
+                         "modeled-vs-measured byte reconciliation report; "
+                         "summarize with repro.launch.trace_dump")
     args = ap.parse_args()
     if args.kill_after and not (args.async_ and args.checkpoint_dir):
         ap.error("--kill-after needs --async and --checkpoint-dir")
@@ -230,12 +258,12 @@ def main() -> None:
                   replicas=args.replicas, mesh_devices=args.mesh,
                   serve_mode=args.serve_mode,
                   checkpoint_dir=args.checkpoint_dir,
-                  kill_after=args.kill_after)
+                  kill_after=args.kill_after, trace_out=args.trace_out)
     else:
         run(tenants=args.tenants,
             queries_per_tenant=args.queries_per_tenant,
             slots=args.slots, base_n=args.base_n, mesh_devices=args.mesh,
-            serve_mode=args.serve_mode)
+            serve_mode=args.serve_mode, trace_out=args.trace_out)
 
 
 if __name__ == "__main__":

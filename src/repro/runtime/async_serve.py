@@ -70,6 +70,7 @@ from repro.runtime.fault import (Heartbeat, InjectedFault,
                                  elastic_restore_engine, guarded_step)
 from repro.runtime.join_serve import JoinRequest, JoinServer, tenant_of
 from repro.runtime.stream_join import StreamJoinServer, StreamJoinSession
+from repro.runtime.telemetry import NULL_TRACER, Tracer
 
 DEFAULT_LINGER_S = 0.002
 
@@ -101,6 +102,10 @@ class AsyncJoinServer:
         assert self.engine.on_done is None, \
             "engine already owned by an async tier"
         self.engine.on_done = self._on_done
+        # replica-tag the engine's trace lane: every event the engine emits
+        # from here on carries this replica's name, so a shared front-door
+        # tracer separates replicas into distinct perfetto threads
+        self.engine.trace_name = name
         self.linger_s = linger_s
         self.deadline_margin_s = deadline_margin_s
         self.idle_wait_s = idle_wait_s
@@ -228,6 +233,11 @@ class AsyncJoinServer:
             return futs
         return self.call(_submit).result()
 
+    @property
+    def tracer(self) -> Tracer:
+        """The engine's tracer (``NULL_TRACER`` unless one was attached)."""
+        return self.engine.tracer
+
     def backlog(self) -> int:
         """Pending request count (ingress ring + engine queue)."""
         return len(self._ingress) + len(self.engine.queue)
@@ -276,6 +286,8 @@ class AsyncJoinServer:
                     # absorbs it; the handler marks the replica dead and
                     # fails every pending future, and the front door's
                     # failover hands the newest checkpoint to a successor
+                    self.tracer.instant("fault", cat="fleet", tid=self.name,
+                                        replica=self.name)
                     raise InjectedFault(f"replica {self.name} killed by "
                                         "fault injection")
                 if self._steal_wanted.is_set():
@@ -294,7 +306,13 @@ class AsyncJoinServer:
                         if self._running and not self._ingress:
                             self._cv.wait(self.idle_wait_s)
                     continue
-                self._linger()
+                if self.tracer.enabled:
+                    with self.tracer.span("linger", cat="batch",
+                                          tid=self.name,
+                                          backlog=self.backlog()):
+                        self._linger()
+                else:
+                    self._linger()
                 if not self._running:
                     break
                 with self._elock:
@@ -335,7 +353,9 @@ class AsyncJoinServer:
                 # serving continues — that would hand a failover successor
                 # an arbitrarily stale snapshot
                 raise self._ckpt_writer.exception
-        with self._elock:
+        with self._elock, \
+                self.tracer.span("checkpoint", cat="fleet", tid=self.name,
+                                 step=self._ckpt_step):
             flat, meta = self.engine.snapshot_state()
             meta["replica"] = self.name
             self._ckpt_writer = save_checkpoint(
@@ -526,8 +546,14 @@ class AsyncJoinFrontDoor:
                  linger_s: float = DEFAULT_LINGER_S,
                  checkpoint_dir: Optional[str] = None,
                  checkpoint_every_s: float = 0.0,
-                 heartbeat_timeout_s: float = 5.0, **engine_kw):
+                 heartbeat_timeout_s: float = 5.0,
+                 tracer: Optional[Tracer] = None, **engine_kw):
         assert replicas >= 1, replicas
+        # one SHARED tracer across the fleet: replica engines tag their
+        # events with their replica name (pid lanes in the chrome export),
+        # and fleet-level events (steal/failover) land on the "front-door"
+        # lane.  Sharing also keeps span ids unique fleet-wide.
+        self.tracer = NULL_TRACER if tracer is None else tracer
         self.sigma = SigmaRegistry() if sigma_registry is None \
             else sigma_registry
         self.work_stealing = work_stealing
@@ -550,6 +576,8 @@ class AsyncJoinFrontDoor:
                 eng.sigma = self.sigma        # shared: see class docstring
             else:
                 eng = JoinServer(sigma_registry=self.sigma, **engine_kw)
+            if tracer is not None:
+                eng.tracer = tracer
             ckdir = os.path.join(checkpoint_dir, f"replica{i}") \
                 if checkpoint_dir is not None else None
             self.replicas.append(AsyncJoinServer(
@@ -673,10 +701,15 @@ class AsyncJoinFrontDoor:
                     restore()
             else:
                 successor.call(restore).result()
+        moved = 0
         for tenant, rep in list(self._assign.items()):
             if rep is dead:
                 self._assign[tenant] = successor
+                moved += 1
         self.failovers += 1
+        self.tracer.instant("failover", cat="fleet", tid="front-door",
+                            dead=dead.name, successor=successor.name,
+                            tenants=moved)
         return True
 
     def _steal_for(self, thief: AsyncJoinServer) -> bool:
@@ -701,6 +734,10 @@ class AsyncJoinFrontDoor:
                 self._assign[tenant] = thief
                 thief._accept_stolen(admitted, ingress_items)
                 self.steals += 1
+                self.tracer.instant(
+                    "steal", cat="fleet", tid="front-door", tenant=tenant,
+                    victim=victim.name, thief=thief.name,
+                    moved=len(admitted) + len(ingress_items))
                 return True
         finally:
             self._alock.release()

@@ -121,6 +121,10 @@ from repro.core.join import (EXPRS, TUPLE_BYTES, JoinDiagnostics, JoinResult,
 from repro.core.plan import CompiledPlan, Plan, compile_plan
 from repro.core.relation import (Relation, bucket_capacity, bucket_to_pow2,
                                  fingerprint, shard_to_mesh)
+from repro.runtime.telemetry import (NULL_TRACER, Histogram, MetricsRegistry,
+                                     Tracer, latency_pcts, recon_pair,
+                                     span_tree)
+from repro.runtime.telemetry import reconciliation_report as _recon_report
 
 DEFAULT_B_MAX = 2048
 AGGS = ("sum", "count", "avg", "stdev")
@@ -251,6 +255,13 @@ class JoinRequest:
     # words); when set, the batch path uses them verbatim instead of
     # fetching through the per-dataset cache
     _words: Optional[list] = field(default=None, repr=False)
+    # compile-time byte model of the owning plan node (submit_plan copies
+    # the node's node_bytes_model dict here) — the reconciliation report
+    # pairs its bytes_pushdown against the serve-time metered bytes
+    _bytes_model: Optional[dict] = field(default=None, repr=False)
+    # tracer span id grouping every span of this request's execution
+    # (unique per request instance, survives failover via Tracer.adopt)
+    _span_id: Optional[int] = field(default=None, repr=False)
 
 
 @dataclass
@@ -278,53 +289,104 @@ class PlanHandle:
                 if r.done and r.result is not None}
 
 
-@dataclass
-class ServerDiagnostics:
-    """Server-level counters (cumulative since construction)."""
+# ServerDiagnostics scalar counters in snapshot order, with their comments:
+#   queries..kernel_queries — served-query counts by decision/backend
+#   queue_latency_s/e2e_latency_s — summed ingest->dispatch / ->complete
+#   plan_compiles/plan_cache_hits — compiled-plan cache misses/reuses
+#   sigma_deferrals — same-id repeats pushed to the next step
+#   deadline_promotions — backlog steps served out of FIFO order
+#   filter_s/filter_build_s/filter_builds/filter_cache_hits — Bloom stage
+#   shuffled_bytes_saved — repartition-vs-filtered delta over served queries
+#   kernel_gather_bytes — host gather bytes for kernel queries on a mesh
+#     server (zero at mesh 1 and meshless — asserted in tests)
+#   dist_shuffled_tuple_bytes — measured live bytes moved (mesh only)
+#   dist_dropped_tuples — shuffle rows dropped beyond the bucket plan
+#     (always 0 under the lossless exact-parity default)
+#   dist_wire_bytes_model — static per-device collective-buffer bytes (the
+#     Eq. 24 serve-time wire model; what a dense dataflow puts on the wire)
+#   filter_exchange_bytes_model — summed §3.1 (n+1)-exchange model over
+#     served queries; its metered counterpart below counts ACTUAL word
+#     bytes put on the wire by mesh filter builds (cache hits move none),
+#     so the pair exposes the serving tier's filter-exchange amortization
+#   tenant_evictions — per-tenant latency rings LRU-evicted past tenant_cap
+_DIAG_SCALAR_FIELDS = (
+    "queries", "steps", "cache_hits", "compiles", "exact_queries",
+    "sampled_queries", "kernel_queries", "queue_latency_s", "e2e_latency_s",
+    "plan_compiles", "plan_cache_hits", "sigma_deferrals",
+    "deadline_promotions", "filter_s", "filter_build_s", "filter_builds",
+    "filter_cache_hits", "shuffled_bytes_saved", "kernel_gather_bytes",
+    "dist_shuffled_tuple_bytes", "dist_dropped_tuples",
+    "dist_wire_bytes_model", "filter_exchange_bytes_model",
+    "filter_exchange_bytes_measured", "tenant_evictions", "max_batch")
+# per-device f64 [k] meters (mesh servers only; None elsewhere)
+_DIAG_VECTOR_FIELDS = ("per_device_shuffled_bytes",
+                       "per_device_dropped_tuples")
 
-    queries: int = 0
-    steps: int = 0
-    cache_hits: int = 0
-    compiles: int = 0               # executable-cache misses
-    exact_queries: int = 0
-    sampled_queries: int = 0
-    kernel_queries: int = 0
-    queue_latency_s: float = 0.0    # summed ingest->dispatch over finished
-    e2e_latency_s: float = 0.0      # summed ingest->complete over finished
-    # bounded rings of recent per-query latencies; snapshot() reduces each
-    # to p50/p95/max (the distributions the deadline-aware admission and
-    # the async tier's SLO reporting consult — a running sum cannot see
-    # tail latency)
-    queue_latencies: list = field(default_factory=list, repr=False)
-    e2e_latencies: list = field(default_factory=list, repr=False)
-    # tenant -> (queue ring, e2e ring), same bound: a front door reading
-    # one replica snapshot can attribute a latency regression to a tenant
-    tenant_latencies: dict = field(default_factory=dict, repr=False)
-    plan_compiles: int = 0          # compiled-plan cache misses
-    plan_cache_hits: int = 0        # compiled-plan cache reuses
-    sigma_deferrals: int = 0        # same-id repeats pushed to the next step
-    deadline_promotions: int = 0    # backlog steps served out of FIFO order
-    filter_s: float = 0.0           # summed batch filter-stage wall time
-    filter_build_s: float = 0.0     # summed filter-word build wall time
-    filter_builds: int = 0          # Bloom word builds (cache misses)
-    filter_cache_hits: int = 0      # Bloom word reuses
-    shuffled_bytes_saved: float = 0.0
-    # host gather bytes for kernel-path queries on a mesh server (the
-    # single-device kernels pull sharded rows back to the default device;
-    # zero at mesh 1 and on meshless servers — asserted in tests)
-    kernel_gather_bytes: float = 0.0
-    # distributed-mode meters (mesh servers only)
-    dist_shuffled_tuple_bytes: float = 0.0   # measured live bytes moved
-    per_device_shuffled_bytes: Optional[np.ndarray] = None  # f64 [k]
-    # shuffle rows dropped beyond the bucket plan (psum capacity planning);
-    # always 0 under the lossless exact-parity default
-    dist_dropped_tuples: float = 0.0
-    per_device_dropped_tuples: Optional[np.ndarray] = None  # f64 [k]
-    # static per-device collective-buffer bytes (the Eq. 24 serve-time wire
-    # model: all_to_all buffers + merge collectives; what a dense dataflow
-    # actually puts on the wire, unlike the live-tuple meter above)
-    dist_wire_bytes_model: float = 0.0
-    max_batch: int = 0
+
+class ServerDiagnostics:
+    """Server-level counters (cumulative since construction).
+
+    Every field is backed by a :class:`repro.runtime.telemetry.MetricsRegistry`
+    metric (scalars by counters, per-device meters by gauges, the latency
+    rings by histograms) — the registry is the single store behind
+    ``snapshot()``, the Prometheus export, and the stream diagnostics that
+    share it.  Attribute access routes through the registry, so the classic
+    ``diag.queries += 1`` call sites (and the additive restore merge) are
+    unchanged.
+
+    Per-tenant latency rings are LRU-bounded at ``tenant_cap`` distinct
+    tenants (an adversarial tenant-id stream must not grow ``per_tenant``
+    without limit); evictions are counted in ``tenant_evictions``.
+    """
+
+    _SCALARS = frozenset(_DIAG_SCALAR_FIELDS)
+    _VECTORS = frozenset(_DIAG_VECTOR_FIELDS)
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None,
+                 tenant_cap: int = 256):
+        self.registry = MetricsRegistry() if registry is None else registry
+        self.tenant_cap = tenant_cap
+        for f in _DIAG_SCALAR_FIELDS:
+            self.registry.counter("serve_" + f)
+        for f in _DIAG_VECTOR_FIELDS:
+            self.registry.gauge("serve_" + f)
+        # bounded rings of recent per-query latencies; snapshot() reduces
+        # each to p50/p95/max (the distributions the deadline-aware
+        # admission and the async tier's SLO reporting consult — a running
+        # sum cannot see tail latency)
+        self._q_hist = self.registry.histogram("serve_queue_latencies")
+        self._e_hist = self.registry.histogram("serve_e2e_latencies")
+        # tenant -> (queue Histogram, e2e Histogram), LRU order: a front
+        # door reading one replica snapshot can attribute a latency
+        # regression to a tenant
+        self._tenants: OrderedDict = OrderedDict()
+
+    def __getattr__(self, name):
+        # only reached when normal lookup fails — i.e. the registry-backed
+        # fields and the legacy ring views
+        d = object.__getattribute__(self, "__dict__")
+        reg = d.get("registry")
+        if reg is not None:
+            if name in self._SCALARS:
+                return reg.counter("serve_" + name).value
+            if name in self._VECTORS:
+                return reg.gauge("serve_" + name).value
+            if name == "queue_latencies":
+                return d["_q_hist"].samples
+            if name == "e2e_latencies":
+                return d["_e_hist"].samples
+            if name == "tenant_latencies":
+                return {t: (qh.samples, eh.samples)
+                        for t, (qh, eh) in d["_tenants"].items()}
+        raise AttributeError(name)
+
+    def __setattr__(self, name, value):
+        if name in self._SCALARS:
+            self.registry.counter("serve_" + name).value = value
+        elif name in self._VECTORS:
+            self.registry.gauge("serve_" + name).value = value
+        else:
+            object.__setattr__(self, name, value)
 
     def note_latency(self, tenant: str, queue_s: float, e2e_s: float,
                      cap: int) -> None:
@@ -332,45 +394,57 @@ class ServerDiagnostics:
         latencies into the global and per-tenant bounded rings."""
         self.queue_latency_s += queue_s
         self.e2e_latency_s += e2e_s
-        per = self.tenant_latencies.setdefault(tenant, ([], []))
-        for ring, x in ((self.queue_latencies, queue_s),
-                        (self.e2e_latencies, e2e_s),
+        per = self._tenants.get(tenant)
+        if per is None:
+            per = (Histogram(f"tenant_queue_latencies/{tenant}", cap),
+                   Histogram(f"tenant_e2e_latencies/{tenant}", cap))
+            self._tenants[tenant] = per
+            while len(self._tenants) > self.tenant_cap:
+                self._tenants.popitem(last=False)
+                self.tenant_evictions += 1
+        else:
+            self._tenants.move_to_end(tenant)
+        for hist, x in ((self._q_hist, queue_s), (self._e_hist, e2e_s),
                         (per[0], queue_s), (per[1], e2e_s)):
-            ring.append(x)
-            if len(ring) > cap:
-                del ring[:len(ring) - cap]
+            hist.cap = cap
+            hist.observe(x)
 
     def reset_latencies(self) -> None:
         """Clear the latency sample rings (cumulative counters stay).  A
         bench reusing one warmed server calls this between timed segments
         so warmup-era samples cannot leak into a later segment's
         percentiles."""
-        self.queue_latencies.clear()
-        self.e2e_latencies.clear()
-        self.tenant_latencies.clear()
+        self._q_hist.reset_samples()
+        self._e_hist.reset_samples()
+        self._tenants.clear()
 
     @staticmethod
-    def _pcts(lat: list, prefix: str) -> dict:
-        if lat:
-            p50, p95 = np.percentile(np.asarray(lat, np.float64), [50, 95])
-            return {f"{prefix}_p50_s": float(p50),
-                    f"{prefix}_p95_s": float(p95),
-                    f"{prefix}_max_s": float(np.max(lat))}
-        return {f"{prefix}_p50_s": 0.0, f"{prefix}_p95_s": 0.0,
-                f"{prefix}_max_s": 0.0}
+    def _pcts(lat, prefix: str) -> dict:
+        return latency_pcts(lat, prefix)
+
+    def scalars(self) -> dict:
+        """The scalar counters as a plain dict (the crash-safe meta form)."""
+        return {f: getattr(self, f) for f in _DIAG_SCALAR_FIELDS}
+
+    def prometheus(self, prefix: str = "repro") -> str:
+        """Prometheus text exposition of the backing registry."""
+        return self.registry.prometheus(prefix)
 
     def snapshot(self) -> dict:
-        d = dict(vars(self))
-        for key in ("per_device_shuffled_bytes", "per_device_dropped_tuples"):
-            if d[key] is not None:
-                d[key] = [float(x) for x in d[key]]
-        d.update(self._pcts(d.pop("queue_latencies"), "queue_latency"))
-        d.update(self._pcts(d.pop("e2e_latencies"), "e2e_latency"))
+        """Point-in-time dict view — strictly read-only and idempotent:
+        building a snapshot mutates nothing, and two consecutive snapshots
+        of an idle server are equal (asserted in tests)."""
+        d: dict = self.scalars()
+        for f in _DIAG_VECTOR_FIELDS:
+            v = getattr(self, f)
+            d[f] = None if v is None else [float(x) for x in v]
+        d.update(latency_pcts(self._q_hist.samples, "queue_latency"))
+        d.update(latency_pcts(self._e_hist.samples, "e2e_latency"))
         d["per_tenant"] = {
-            t: {"samples": len(qring),
-                **self._pcts(qring, "queue_latency"),
-                **self._pcts(ering, "e2e_latency")}
-            for t, (qring, ering) in d.pop("tenant_latencies").items()}
+            t: {"samples": len(qh.samples),
+                **latency_pcts(qh.samples, "queue_latency"),
+                **latency_pcts(eh.samples, "e2e_latency")}
+            for t, (qh, eh) in self._tenants.items()}
         return d
 
 
@@ -475,7 +549,9 @@ class JoinServer:
                  filter_cache_entries: int = 256,
                  sigma_pipeline: bool = True,
                  backlog_slots: Optional[int] = None,
-                 latency_samples: int = 4096):
+                 latency_samples: int = 4096,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         assert serve_mode in SERVE_MODES, serve_mode
         self.serve_mode = serve_mode
         self.batch_slots = batch_slots
@@ -509,7 +585,18 @@ class JoinServer:
         # device-resident filter words without limit
         self._filter_words: OrderedDict = OrderedDict()
         self.filter_cache_entries = filter_cache_entries
-        self.diagnostics = ServerDiagnostics()
+        # telemetry: a disabled NULL_TRACER by default — span()/event()/
+        # instant() early-return, so the untraced hot path pays one
+        # attribute read per site.  The metrics registry is the single
+        # backing store of the diagnostics (and of a StreamDiagnostics
+        # sharing it); `tracer.tags` carries replica/mesh identity into
+        # every recorded event.
+        self.tracer = NULL_TRACER if tracer is None else tracer
+        self.trace_name = "engine"   # lane/replica label for step spans
+        self.diagnostics = ServerDiagnostics(registry=metrics)
+        # per-step scratch the tracer consumes (None while tracing is off)
+        self._stage_trace: Optional[dict] = None
+        self._recon_batch: Optional[dict] = None
         # completion callback (request -> None), fired by _notify_done for
         # every finished or shed request; the async tier installs its
         # future-resolver here
@@ -533,6 +620,9 @@ class JoinServer:
             self.join_axes = ()
             self.mesh_k = 1
             self.mesh_shape = ()
+        if tracer is not None and self.mesh is not None:
+            tracer.tags.setdefault(
+                "mesh", "x".join(str(s) for _, s in self.mesh_shape))
 
     # -- admission ----------------------------------------------------------
 
@@ -614,6 +704,13 @@ class JoinServer:
             # async ingestion pre-stamps _ingest_t at the front door so the
             # ingress-ring wait counts; the synchronous path starts here
             req._ingest_t = req._submit_t
+        if self.tracer.enabled:
+            if req._span_id is None:
+                req._span_id = self.tracer.next_id()
+            self.tracer.instant(
+                "ingest", cat="admission", tid=self.trace_name,
+                ts=req._ingest_t, query_id=req.query_id,
+                tenant=tenant_of(req.query_id), qspan=req._span_id)
         self.queue.append(req)
         return req
 
@@ -631,7 +728,10 @@ class JoinServer:
         key = plan.signature()
         compiled = self._plan_cache.get(key)
         if compiled is None:
-            compiled = compile_plan(plan, self.datasets)
+            with self.tracer.span("plan-compile", cat="plan",
+                                  tid=self.trace_name,
+                                  nodes=len(plan.nodes)):
+                compiled = compile_plan(plan, self.datasets)
             self._plan_cache[key] = compiled
             self.diagnostics.plan_compiles += 1
         else:
@@ -652,6 +752,12 @@ class JoinServer:
         """
         compiled = self.compile_plan(plan)
         handle = PlanHandle(query_id)
+        # plan -> node span hierarchy: node spans carry plan/plan_node args
+        # and this instant carries the node-reference edges, so trace
+        # consumers (trace_dump) can nest each node's query span under the
+        # nodes that reference it
+        self.tracer.instant("plan", cat="plan", tid=self.trace_name,
+                            plan=query_id, hierarchy=plan.hierarchy())
         for cn in compiled.nodes:
             node = cn.node
             model = compiled.bytes_model.get(node.name)
@@ -665,6 +771,7 @@ class JoinServer:
                 serve_mode=serve_mode,
                 overlap_hint=None if model is None else model["overlap"],
                 plan=query_id, plan_node=node.name)
+            req._bytes_model = None if model is None else dict(model)
             self.submit(req)
             handle.requests[node.name] = req
         self.plans[query_id] = handle
@@ -749,6 +856,13 @@ class JoinServer:
                 partial(_make_filter_build, num_blocks))
         words = build(rel.keys, rel.valid, jnp.uint32(seed))
         jax.block_until_ready(words)
+        if self.mesh is not None and self.mesh_k > 1:
+            # metered filter-exchange bytes: a mesh build OR-reduces local
+            # words across k devices, putting ~(k-1) copies of the word
+            # array on the wire; cache hits move nothing — so this meter
+            # vs the per-query §3.1 model exposes the cache amortization
+            self.diagnostics.filter_exchange_bytes_measured += \
+                float(words.size * words.dtype.itemsize) * (self.mesh_k - 1)
         if fp is not None:
             self._filter_words[key] = words
             while len(self._filter_words) > self.filter_cache_entries:
@@ -834,6 +948,7 @@ class JoinServer:
         """Serve one batch of same-shape-class queries; returns batch size."""
         if not self.queue:
             return 0
+        t_form = time.perf_counter()
         cls, batch = self._take_batch()
         t_dispatch = time.perf_counter()
         self.diagnostics.steps += 1
@@ -855,7 +970,76 @@ class JoinServer:
             self.diagnostics.shuffled_bytes_saved += float(
                 d.shuffled_bytes_repartition - d.shuffled_bytes_filtered)
             self._notify_done(req)
+        if self.tracer.enabled:
+            self._trace_step(cls, batch, t_form, t_dispatch, t_done)
+        self._stage_trace = self._recon_batch = None
         return len(batch)
+
+    def _path_of(self, cls: ShapeClass) -> str:
+        """Serving-path tag for trace/reconciliation grouping."""
+        if cls.use_kernels:
+            return "kernel"
+        if cls.mesh:
+            return f"mesh{self.mesh_k}/{cls.serve_mode}"
+        return "single"
+
+    def _trace_step(self, cls: ShapeClass, batch: list[JoinRequest],
+                    t_form: float, t_dispatch: float, t_done: float) -> None:
+        """Emit the step's spans: one engine-lane group (batch-formation,
+        step, stage timings) plus a complete per-query span tree (query ->
+        queued/execute -> prepare/filter-exchange/shuffle/sample|exact ->
+        complete) on a lane per request instance, and the per-query byte
+        reconciliation records collected by ``_run_batch``."""
+        tr, lane, path = self.tracer, self.trace_name, self._path_of(cls)
+        tr.event("batch-formation", t_form, t_dispatch - t_form, cat="batch",
+                 tid=lane, batch=len(batch), path=path)
+        tr.event("step", t_dispatch, t_done - t_dispatch, cat="serve",
+                 tid=lane, batch=len(batch), path=path)
+        stages = self._stage_trace or {}
+        for name, (ts, dur, extra) in stages.items():
+            tr.event(name, ts, dur, cat="stage", tid=lane, path=path,
+                     **extra)
+        recs = self._recon_batch or {}
+        for req in batch:
+            tid = f"q:{req.query_id}#{req._span_id}"
+            base = dict(query_id=req.query_id, qspan=req._span_id, path=path)
+            if req.stream is not None:
+                base.update(stream=req.stream, window=req.window_id)
+            if req.plan is not None:
+                base.update(plan=req.plan, plan_node=req.plan_node)
+            tr.event("query", req._ingest_t,
+                     req._complete_t - req._ingest_t, cat="query", tid=tid,
+                     seed=req.seed, tenant=tenant_of(req.query_id), **base)
+            tr.event("queued", req._ingest_t,
+                     req._dispatch_t - req._ingest_t, cat="query", tid=tid,
+                     **base)
+            tr.event("execute", req._dispatch_t,
+                     req._complete_t - req._dispatch_t, cat="query", tid=tid,
+                     **base)
+            for name, (ts, dur, extra) in stages.items():
+                tr.event(name, ts, dur, cat="stage", tid=tid, **base,
+                         **extra)
+            rec = recs.get(id(req))
+            if rec is not None:
+                tr.note_recon(rec)
+                # zero-duration sub-phase markers carrying the byte pairs
+                # (filter exchange and shuffle are fused into the prepare
+                # dispatch — one XLA program — so they mark, not span)
+                p_ts, p_dur, _ = stages.get("prepare",
+                                            (req._dispatch_t, 0.0, None))
+                pairs = {p["name"]: p for p in rec["pairs"]}
+                fe = pairs.get("filter_exchange_bytes")
+                if fe is not None:
+                    tr.event("filter-exchange", p_ts + p_dur, 0.0,
+                             cat="stage", tid=tid, modeled=fe["modeled"],
+                             **base)
+                sh = pairs.get("live_tuple_bytes")
+                if sh is not None:
+                    tr.event("shuffle", p_ts + p_dur, 0.0, cat="stage",
+                             tid=tid, modeled=sh["modeled"],
+                             measured=sh["measured"], **base)
+            tr.instant("complete", cat="query", tid=tid,
+                       ts=req._complete_t, **base)
 
     def _notify_done(self, req: JoinRequest) -> None:
         """Completion hook — fires once per finished OR shed request.  The
@@ -888,15 +1072,7 @@ class JoinServer:
 
     # scalar diagnostics that survive a crash (cumulative counters; the
     # latency rings and per-device arrays restart empty)
-    _DIAG_SCALARS = (
-        "queries", "steps", "cache_hits", "compiles", "exact_queries",
-        "sampled_queries", "kernel_queries", "queue_latency_s",
-        "e2e_latency_s", "sigma_deferrals", "deadline_promotions",
-        "filter_s", "filter_build_s", "filter_builds", "filter_cache_hits",
-        "shuffled_bytes_saved", "kernel_gather_bytes",
-        "plan_compiles", "plan_cache_hits",
-        "dist_shuffled_tuple_bytes", "dist_dropped_tuples",
-        "dist_wire_bytes_model", "max_batch")
+    _DIAG_SCALARS = _DIAG_SCALAR_FIELDS
 
     @staticmethod
     def _req_meta(req: JoinRequest) -> dict:
@@ -969,6 +1145,9 @@ class JoinServer:
         meta["queue"] = q_meta
         meta["diag"] = {f: getattr(self.diagnostics, f)
                         for f in self._DIAG_SCALARS}
+        # span-id sequence: the successor adopting this snapshot must never
+        # reuse this engine's span ids (Tracer.adopt max-merges)
+        meta["telemetry"] = self.tracer.state()
         return flat, meta
 
     def restore_state(self, flat: dict, meta: dict) -> list[JoinRequest]:
@@ -1033,6 +1212,9 @@ class JoinServer:
             else:
                 setattr(self.diagnostics, f,
                         getattr(self.diagnostics, f) + v)
+        tel = meta.get("telemetry")
+        if tel and self.tracer is not NULL_TRACER:
+            self.tracer.adopt(tel)
         return restored
 
     # -- execution paths ----------------------------------------------------
@@ -1273,6 +1455,9 @@ class JoinServer:
         B, rels_b, words_b, seeds, fseeds, num_blocks = \
             self._batch_inputs(cls, batch)
         builders = self._stage_builders(cls, num_blocks)
+        # stage-timing scratch for the tracer ({} only while tracing, so the
+        # untraced path keeps its exact laziness — no extra blocking)
+        stages = {} if self.tracer.enabled else None
 
         prepare, fresh = self._executable("prepare", cls, B,
                                           builders["prepare"])
@@ -1281,13 +1466,19 @@ class JoinServer:
             # cost function (§3.2), which models repeated query execution —
             # charging one-off trace+compile seconds would zero out every
             # latency budget on the first batch of a shape class.
+            tc = time.perf_counter()
             jax.block_until_ready(
                 prepare(rels_b, words_b, fseeds).strata.counts)
+            if stages is not None:
+                stages["compile"] = (tc, time.perf_counter() - tc,
+                                     {"stage": "prepare"})
         t0 = time.perf_counter()
         prep = prepare(rels_b, words_b, fseeds)
         jax.block_until_ready(prep.strata.counts)
         d_filter = time.perf_counter() - t0
         self.diagnostics.filter_s += d_filter
+        if stages is not None:
+            stages["prepare"] = (t0, d_filter, {})
 
         population = np.asarray(jax.device_get(prep.population))
         skeys = np.asarray(jax.device_get(prep.strata.keys))
@@ -1303,11 +1494,21 @@ class JoinServer:
         if sampled_idx:
             sample, _ = self._executable("sample", cls, B,
                                          builders["sample"])
+            ts = time.perf_counter()
             value, err, cnt, dof, stats = sample(*builders["sample_args"](
                 prep, jnp.stack(b_rows), seeds + jnp.uint32(1)))
+            if stages is not None:
+                jax.block_until_ready(value)
+                stages["sample"] = (ts, time.perf_counter() - ts,
+                                    {"queries": len(sampled_idx)})
         if exact_idx:
             exact, _ = self._executable("exact", cls, B, builders["exact"])
+            ts = time.perf_counter()
             e_est, e_cnt = exact(*builders["exact_args"](prep))
+            if stages is not None:
+                jax.block_until_ready(e_est)
+                stages["exact"] = (ts, time.perf_counter() - ts,
+                                   {"queries": len(exact_idx)})
 
         # kernel classes run the single-device pipeline even on a mesh
         # server (plain PrepareOut: no shuffle buckets, nothing dropped)
@@ -1324,6 +1525,9 @@ class JoinServer:
             err=err, cnt=cnt, dof=dof, stats=stats, skeys=skeys,
             dropped=dropped)
 
+        fbytes = num_blocks * bloom.WORDS_PER_BLOCK * 4
+        self.diagnostics.filter_exchange_bytes_model += \
+            len(batch) * float(filter_exchange_bytes(cls.n_inputs, fbytes))
         if not meshless:
             # measured per-device shuffle volume (the paper's data-movement
             # reduction, observable from the server); pad slots excluded
@@ -1343,3 +1547,82 @@ class JoinServer:
                 np.float64)[:n_real].sum(axis=0)
             self.diagnostics.dist_wire_bytes_model += \
                 n_real * self._wire_bytes_model(cls)
+        if stages is not None:
+            self._stage_trace = stages
+            self._recon_batch = self._recon_records(cls, batch, prep,
+                                                    fbytes, meshless)
+
+    def _recon_records(self, cls: ShapeClass, batch: list[JoinRequest],
+                       prep, fbytes: int, meshless: bool) -> dict:
+        """Per-query byte-reconciliation records (traced steps only): each
+        modeled cost paired with its metered counterpart, keyed by request
+        identity for ``_trace_step``.  The extra device_gets here run only
+        under tracing — the untraced hot path is unchanged."""
+        n_real, n, k = len(batch), cls.n_inputs, self.mesh_k
+        live = np.asarray(jax.device_get(prep.live_counts))[:n_real]
+        tup = dev = None
+        if not meshless:
+            tup = np.asarray(jax.device_get(
+                prep.shuffled_tuple_bytes))[:n_real]
+            dev = np.asarray(jax.device_get(
+                prep.device_shuffled_bytes))[:n_real]
+        path, wire = self._path_of(cls), self._wire_bytes_model(cls)
+        fe_model = float(filter_exchange_bytes(n, fbytes))
+        out = {}
+        for i, req in enumerate(batch):
+            live_model = float(live[i].sum()) * TUPLE_BYTES
+            # live-tuple bytes: §3.1's filtered-shuffle volume vs the
+            # metered per-query tuple bytes actually moved (mesh only —
+            # single-device and kernel queries move no wire tuples)
+            pairs = [recon_pair("live_tuple_bytes", live_model,
+                                None if tup is None else float(tup[i]))]
+            # per-query filter exchange is modeled-only here: the measured
+            # counterpart is cumulative and amortized across the word cache
+            # (see the server-level pair in reconciliation_report)
+            pairs.append(recon_pair("filter_exchange_bytes", fe_model, None))
+            if not meshless:
+                # static collective-buffer model vs live tuple bytes: the
+                # gap is the dense dataflow's buffer slack
+                pairs.append(recon_pair("dist_wire_bytes_model", wire,
+                                        float(tup[i])))
+            if req._bytes_model is not None:
+                # compile-time plan-node model vs this execution's serve-
+                # time restatement of the same §3.1 cost
+                pairs.append(recon_pair(
+                    "node_bytes_model",
+                    float(req._bytes_model["bytes_pushdown"]),
+                    live_model + fe_model))
+            rec = {"query_id": req.query_id, "path": path,
+                   "stream": req.stream, "window_id": req.window_id,
+                   "plan": req.plan, "plan_node": req.plan_node,
+                   "pairs": pairs}
+            if dev is not None:
+                rec["per_device"] = {"modeled": [wire / k] * k,
+                                     "measured": [float(x) for x in dev[i]]}
+            out[id(req)] = rec
+        return out
+
+    def reconciliation_report(self) -> dict:
+        """Modeled-vs-metered byte report: per-query records (traced
+        queries), per-path aggregates, and the cumulative server-level
+        pairs that exist with tracing off too."""
+        d = self.diagnostics
+        server_pairs = [
+            recon_pair("filter_exchange_bytes", d.filter_exchange_bytes_model,
+                       d.filter_exchange_bytes_measured
+                       if self.mesh is not None else None),
+            recon_pair("dist_wire_bytes_model", d.dist_wire_bytes_model,
+                       d.dist_shuffled_tuple_bytes
+                       if self.mesh is not None else None),
+            # host gathers of the kernel-on-mesh route are unmodeled cost:
+            # modeled 0, so any metered bytes surface as pure model error
+            recon_pair("kernel_gather_bytes", 0.0,
+                       d.kernel_gather_bytes or None),
+        ]
+        return _recon_report(self.tracer.recon, server_pairs)
+
+    def query_trace(self, query_id: str) -> list:
+        """Span forest of every traced execution of ``query_id`` (each
+        request instance roots its own ``query`` span)."""
+        return span_tree(e for e in self.tracer.events
+                         if e["args"].get("query_id") == query_id)

@@ -66,7 +66,6 @@ latency-budget windows are served before error-budget ones.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
 from functools import partial
 from typing import Optional, Sequence
 
@@ -81,6 +80,7 @@ from repro.core.sampling import (Reservoir, reservoir_empty, reservoir_extend,
                                  reservoir_moments)
 from repro.core.window import SubWindow, WindowBuffer, WindowSpec
 from repro.runtime.join_serve import DEFAULT_B_MAX, JoinRequest, JoinServer
+from repro.runtime.telemetry import MetricsRegistry, latency_pcts
 
 
 def _make_window_or(n_subs: int):
@@ -119,20 +119,66 @@ def _make_window_assemble(n_subs: int, n_sides: int, cap: int):
     return jax.jit(fn)
 
 
-@dataclass
+# StreamDiagnostics scalar counters:
+#   admission_dropped_rows — micro-batch rows beyond the sub-window slot cap
+#   windows_shed — dropped by per-tenant admission, never served
+#   windows_served — served windows (the window-latency ring's population)
+#   retired_filter_words — expired sub-window words evicted from the cache
+_STREAM_SCALAR_FIELDS = ("sessions", "sub_windows", "admission_dropped_rows",
+                         "windows_emitted", "windows_served", "windows_shed",
+                         "retired_filter_words")
+
+
 class StreamDiagnostics:
     """Streaming-side counters (the join counters stay in the base
-    ``ServerDiagnostics`` — one serving engine, one set of cache meters)."""
+    ``ServerDiagnostics`` — one serving engine, one set of cache meters).
 
-    sessions: int = 0
-    sub_windows: int = 0
-    admission_dropped_rows: int = 0   # micro-batch rows beyond the slot cap
-    windows_emitted: int = 0
-    windows_shed: int = 0             # dropped by per-tenant admission
-    retired_filter_words: int = 0     # expired sub-window words evicted
+    Backed by the same :class:`~repro.runtime.telemetry.MetricsRegistry` as
+    the owning server's ``ServerDiagnostics`` (metric names carry a
+    ``stream_`` prefix), and ``snapshot()`` uses the same percentile
+    helper/schema (``window_latency_p50_s``/``_p95_s``/``_max_s``) — so
+    dashboards and the trajectory gate row-match stream and batch metrics
+    uniformly, and one Prometheus scrape covers both.
+    """
+
+    _SCALARS = frozenset(_STREAM_SCALAR_FIELDS)
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        self.registry = MetricsRegistry() if registry is None else registry
+        for f in _STREAM_SCALAR_FIELDS:
+            self.registry.counter("stream_" + f)
+        # bounded ring of per-window ingest->complete latencies
+        self._lat = self.registry.histogram("stream_window_latencies")
+
+    def __getattr__(self, name):
+        d = object.__getattribute__(self, "__dict__")
+        reg = d.get("registry")
+        if reg is not None and name in self._SCALARS:
+            return reg.counter("stream_" + name).value
+        raise AttributeError(name)
+
+    def __setattr__(self, name, value):
+        if name in self._SCALARS:
+            self.registry.counter("stream_" + name).value = value
+        else:
+            object.__setattr__(self, name, value)
+
+    def note_window_latency(self, e2e_s: float, cap: int) -> None:
+        """Record one served window's ingest->complete latency."""
+        self.windows_served += 1
+        self._lat.cap = cap
+        self._lat.observe(e2e_s)
+
+    def scalars(self) -> dict:
+        """The scalar counters as a plain dict (the crash-safe meta form)."""
+        return {f: getattr(self, f) for f in _STREAM_SCALAR_FIELDS}
 
     def snapshot(self) -> dict:
-        return dict(vars(self))
+        """Read-only, idempotent view (same contract and percentile schema
+        as ``ServerDiagnostics.snapshot``)."""
+        d = self.scalars()
+        d.update(latency_pcts(self._lat.samples, "window_latency"))
+        return d
 
 
 class StreamJoinSession:
@@ -397,7 +443,10 @@ class StreamJoinServer(JoinServer):
         super().__init__(**kw)
         self.window_slots = window_slots
         self.sessions: dict[str, StreamJoinSession] = {}
-        self.stream_diagnostics = StreamDiagnostics()
+        # one registry across server + stream diagnostics: a single
+        # snapshot/Prometheus scrape covers the whole serving surface
+        self.stream_diagnostics = StreamDiagnostics(
+            registry=self.diagnostics.registry)
 
     def open_stream(self, name: str, spec: WindowSpec,
                     **kw) -> StreamJoinSession:
@@ -418,11 +467,21 @@ class StreamJoinServer(JoinServer):
             self.queue = [r for r in self.queue if r is not victim]
             victim.shed = True
             self.stream_diagnostics.windows_shed += 1
+            self.tracer.instant(
+                "shed", cat="admission", tid=self.trace_name,
+                query_id=victim.query_id, stream=victim.stream,
+                window=victim.window_id, qspan=victim._span_id)
             # a shed window is terminal: fire the completion hook so an
             # async caller's future resolves (with .shed set) instead of
             # hanging forever on a window that will never be served
             self._notify_done(victim)
         self.submit(req)
+
+    def _notify_done(self, req: JoinRequest) -> None:
+        if req.stream is not None and req.done and not req.shed:
+            self.stream_diagnostics.note_window_latency(
+                req.e2e_latency_s, self.latency_samples)
+        super()._notify_done(req)
 
     # -- crash safety: snapshot / restore -----------------------------------
 
@@ -471,7 +530,7 @@ class StreamJoinServer(JoinServer):
                 "live": [{"index": sub.index, "fps": list(sub.fps)}
                          for sub in s.buffer.live]})
         meta["sessions"] = sess_meta
-        meta["stream_diag"] = dict(vars(self.stream_diagnostics))
+        meta["stream_diag"] = self.stream_diagnostics.scalars()
         return flat, meta
 
     def restore_state(self, flat: dict, meta: dict) -> list[JoinRequest]:
